@@ -1,0 +1,41 @@
+"""Fig. 4 analogue — XLA-engine matmul over the Nproc sweep at constant
+total memory (N = N0/√Nproc), measured wall-clock on this host + the
+derived TPU-pod roofline sweep (runs/sweep/results.json if present).
+
+CSV: name,us_per_call,derived   (derived = GFLOP/s measured here, or the
+pod-level fraction-of-peak for derived rows)
+"""
+import json
+from pathlib import Path
+
+from repro.core.sweep import measured_gflops
+
+ENGINE = "xla"
+N0 = 1536
+NPROCS = (1, 2, 4, 8, 16)
+
+
+def rows():
+    out = []
+    for nproc in NPROCS:
+        r = measured_gflops(ENGINE, nproc, n0=N0)
+        out.append((f"fig4/{ENGINE}/measured/nproc={nproc}/N={r['N']}",
+                    r["us_per_call"], f"{r['gflops']:.1f}GF/s"))
+    sweep = Path("runs/sweep/results.json")
+    if sweep.exists():
+        for r in json.loads(sweep.read_text()):
+            if r["memory"] == "cache":
+                out.append((
+                    f"fig4/derived/{r['placement']}-{r['memory']}/"
+                    f"{r['nproc']}x{r['nthread']}",
+                    0.0, f"{r['peak_fraction']:.1%}-of-peak"))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Fig. 5 analogue — the SECOND engine (Pallas kernel ≙ GNU Octave vs
+Matlab): same constant-memory Nproc sweep through the Pallas matmul
+(interpret mode on CPU; MXU-tiled on TPU).
+
+CSV: name,us_per_call,derived
+"""
+from repro.core.sweep import measured_gflops
+
+ENGINE = "pallas"
+N0 = 512
+NPROCS = (1, 2, 4)
+
+
+def rows():
+    out = []
+    for nproc in NPROCS:
+        r = measured_gflops(ENGINE, nproc, n0=N0, reps=1)
+        out.append((f"fig5/{ENGINE}/measured/nproc={nproc}/N={r['N']}",
+                    r["us_per_call"], f"{r['gflops']:.2f}GF/s"))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Memory-mode table — the 15-configuration MCDRAM/NUMA sweep analogue:
+Pallas matmul BlockSpec tilings × accumulation policies.  Measured
+wall-clock (interpret mode) at a small shape + derived VMEM working set and
+arithmetic intensity per configuration (what governs the real TPU choice).
+
+CSV: name,us_per_call,derived
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.memory_modes import tiling_grid
+from repro.kernels import ops
+
+M = K = N = 512
+
+
+def rows():
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    out = []
+    for mode in tiling_grid():
+        bm, bk, bn = (min(mode.block[0], M), min(mode.block[1], K),
+                      min(mode.block[2], N))
+        accum = "vmem" if mode.k_splits == 1 else "hbm"
+        f = lambda: ops.matmul(a, b, block=(bm, bk, bn), accum=accum)
+        jax.block_until_ready(f())
+        t0 = time.perf_counter()
+        jax.block_until_ready(f())
+        us = (time.perf_counter() - t0) * 1e6
+        # derived: VMEM working set + arithmetic intensity of one grid step
+        flops = 2 * bm * bn * bk
+        hbm = (bm * bk + bk * bn) * 2 + (bm * bn * 4 if accum == "hbm" else 0)
+        out.append((f"memmode/{mode.name}", us,
+                    f"vmem={mode.vmem_bytes()/2**20:.1f}MiB"
+                    f";AI={flops/max(hbm,1):.0f}flop/B"))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Fig. 3 analogue — taskset pinning: topology-aware vs naive device order
+on the 16×16 ICI torus, scored as ring-hop cost per collective step and the
+implied wire-time multiplier for the per-layer TP all-reduce of glm4-9b
+train_4k (the most collective-sensitive dense cell).
+
+CSV: name,us_per_call,derived   (us_per_call = derived collective wire time
+for one glm4 train step's 'model'-axis collectives)
+"""
+from repro.core.affinity import (collective_slowdown, naive_placement,
+                                 pinned_placement)
+from repro.core.roofline import V5E
+
+GLM4_COLL_BYTES = 13.3 * 50e9  # collective_s × link_bw from the dry-run
+
+
+def rows():
+    out = []
+    for p in (pinned_placement(), naive_placement()):
+        mult = collective_slowdown(p, "model")
+        wire_s = GLM4_COLL_BYTES / V5E.ici_bw * mult
+        out.append((f"pinning/{p.name}", wire_s * 1e6,
+                    f"model-ring={p.axis_ring_cost['model']:.2f}hops"
+                    f";data-ring={p.axis_ring_cost['data']:.2f}hops"
+                    f";slowdown={mult:.2f}x"))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  fig4_engine_sweep  — Matlab sweep   ≙ XLA engine, Nproc sweep @ const mem
+  fig5_engine_sweep  — Octave sweep   ≙ Pallas engine, same protocol
+  memory_modes       — 15 MCDRAM/NUMA configs ≙ BlockSpec×accum grid
+  pinning            — Fig.3 taskset  ≙ torus placement hop costs
+
+Prints ``name,us_per_call,derived`` CSV.  The derived TPU-pod sweep table
+(fig4 derived rows) is read from runs/sweep/results.json — generate it with
+``python -m repro.launch.sweep --quick`` (kept out of this process so the
+benchmarks see exactly one real device).
+"""
+from benchmarks import fig4_engine_sweep, fig5_engine_sweep, memory_modes, pinning
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for mod in (fig4_engine_sweep, fig5_engine_sweep, memory_modes, pinning):
+        for name, us, derived in mod.rows():
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

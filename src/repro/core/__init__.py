@@ -1,0 +1,11 @@
+"""The paper's contribution, generalized for TPU pods:
+
+- sweep:        Nproc×Nthread-analogue mesh-factorization sweep (constant
+                total memory, per the paper's N = 48000/√Nproc protocol)
+- autotune:     pick {mesh split, memory mode, placement} from compiled-HLO
+                roofline terms (the operator's "set good defaults" role)
+- affinity:     torus-topology device ordering = `taskset` pinning analogue
+- memory_modes: compile-time VMEM/remat policies = MCDRAM mode analogue
+- roofline:     the three-term model everything is scored by
+- hlo_cost:     loop-aware FLOP/collective extraction from compiled HLO
+"""

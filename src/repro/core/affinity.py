@@ -1,0 +1,93 @@
+"""Topology-aware device ordering — the TPU analogue of `taskset` pinning.
+
+The paper pins each Matlab/Octave process to a physically contiguous block of
+cores (Fig. 3) so OpenMP threads stay near their data.  On a TPU pod the
+analogous decision is *which physical chip* each (data, model) mesh
+coordinate maps to: the 'model' axis carries the per-layer TP collectives, so
+its members should be ICI neighbours.
+
+This module models the v5e pod as a 2-D (16×16) torus, produces "pinned"
+(torus-contiguous, what mesh_utils.create_device_mesh does on real hardware)
+and "naive" (arbitrary enumeration) orderings, and scores a mesh by ring-hop
+cost — the multiplier on every collective's wire time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+TORUS = (16, 16)  # v5e pod: 16×16 2-D torus (256 chips)
+
+
+def torus_coords(n: int = 256, torus: Tuple[int, int] = TORUS) -> np.ndarray:
+    """Physical coordinates of chip i (row-major enumeration)."""
+    rows, cols = torus
+    idx = np.arange(n)
+    return np.stack([idx // cols, idx % cols], axis=1)
+
+
+def hop_distance(a, b, torus: Tuple[int, int] = TORUS) -> int:
+    """Manhattan distance on the wrap-around torus."""
+    d = 0
+    for x, y, m in zip(a, b, torus):
+        dd = abs(int(x) - int(y))
+        d += min(dd, m - dd)
+    return d
+
+
+def ring_cost(order: Sequence[int], coords: np.ndarray) -> int:
+    """Total hops for one ring pass over devices in `order` (incl. wrap)."""
+    n = len(order)
+    return sum(hop_distance(coords[order[i]], coords[order[(i + 1) % n]])
+               for i in range(n))
+
+
+@dataclass
+class MeshPlacement:
+    name: str
+    device_order: np.ndarray  # (data, model) -> physical chip index
+    axis_ring_cost: Dict[str, float]  # avg hops per ring step, per axis
+
+
+def pinned_placement(data: int = 16, model: int = 16) -> MeshPlacement:
+    """'model' groups = torus rows (1 hop/step rings); 'data' = columns."""
+    order = np.arange(data * model).reshape(data, model)  # row-major = rows
+    return _score("pinned", order)
+
+
+def naive_placement(data: int = 16, model: int = 16, seed: int = 0) -> MeshPlacement:
+    """Arbitrary (shuffled) enumeration — an unpinned scheduler's placement."""
+    rng = np.random.RandomState(seed)
+    order = rng.permutation(data * model).reshape(data, model)
+    return _score("naive", order)
+
+
+def _score(name: str, order: np.ndarray) -> MeshPlacement:
+    coords = torus_coords(order.size)
+    data, model = order.shape
+    model_cost = np.mean([ring_cost(order[i, :], coords) / model
+                          for i in range(data)])
+    data_cost = np.mean([ring_cost(order[:, j], coords) / data
+                         for j in range(model)])
+    return MeshPlacement(name, order,
+                         {"model": float(model_cost), "data": float(data_cost)})
+
+
+def collective_slowdown(placement: MeshPlacement, axis: str) -> float:
+    """Wire-time multiplier vs the ideal 1-hop ring for collectives on axis."""
+    return placement.axis_ring_cost[axis] / 1.0
+
+
+def placement_table() -> List[Dict]:
+    rows = []
+    for p in (pinned_placement(), naive_placement()):
+        rows.append({
+            "placement": p.name,
+            "model_ring_hops_per_step": p.axis_ring_cost["model"],
+            "data_ring_hops_per_step": p.axis_ring_cost["data"],
+            "model_collective_slowdown": collective_slowdown(p, "model"),
+            "data_collective_slowdown": collective_slowdown(p, "data"),
+        })
+    return rows

@@ -1,0 +1,68 @@
+"""Configuration autotuner — the systems operator's role in the paper,
+automated: pick {memory mode, attention path, MoE impl, microbatching} per
+(arch × shape) by lowering candidates and comparing roofline terms.
+
+The paper's conclusion ("set KMP_AFFINITY/taskset/all2all-cache once,
+system-wide, and every user's Nproc×Nthread choice stays near peak") maps to
+``select_defaults``: sweep candidates on the production mesh, score by the
+dominant roofline term, and emit the winning config — recorded in
+EXPERIMENTS.md §Perf as the tuned default.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.roofline import V5E, HwSpec, roofline_terms
+
+
+@dataclass(frozen=True)
+class Candidate:
+    name: str
+    overrides: Dict = field(default_factory=dict)  # ModelCfg.replace kwargs
+    microbatches: Optional[int] = None
+
+
+DEFAULT_CANDIDATES = (
+    Candidate("baseline", {}),
+    Candidate("remat-dots", {"remat": "dots"}),
+    Candidate("remat-none", {"remat": "none"}),
+    Candidate("flash-attn", {"use_flash": True}),
+    Candidate("q-chunk-512", {"attn_q_chunk": 512}),
+)
+
+
+def evaluate(arch: str, shape_name: str, mesh, candidates=DEFAULT_CANDIDATES,
+             hw: HwSpec = V5E, hbm_limit: float = 16 * 2**30) -> List[Dict]:
+    """Lower every candidate; return scored rows sorted by step-time bound."""
+    from repro.launch.dryrun import lower_cell
+
+    rows = []
+    for cand in candidates:
+        try:
+            res = lower_cell(arch, shape_name, mesh, overrides=cand.overrides)
+        except Exception as e:  # candidate may be invalid for this arch
+            rows.append({"candidate": cand.name, "error": repr(e)[:200]})
+            continue
+        terms = roofline_terms(res, hw)
+        rows.append({
+            "candidate": cand.name,
+            "fits_hbm": res["analytic_hbm_bytes"] <= hbm_limit * 0.9,
+            "step_bound_s": terms["step_time_lower_bound_s"],
+            "dominant": terms["dominant"],
+            "roofline_fraction": terms["roofline_fraction"],
+            **{k: terms[k] for k in ("compute_s", "memory_s", "collective_s")},
+        })
+    ok = [r for r in rows if r.get("fits_hbm")]
+    ranked = sorted(ok or [r for r in rows if "error" not in r],
+                    key=lambda r: r["step_bound_s"])
+    for i, r in enumerate(ranked):
+        r["rank"] = i
+    return rows
+
+
+def select_defaults(arch: str, shape_name: str, mesh, **kw) -> Dict:
+    rows = evaluate(arch, shape_name, mesh, **kw)
+    best = min((r for r in rows if "error" not in r),
+               key=lambda r: (not r.get("fits_hbm", False), r["step_bound_s"]))
+    return {"best": best, "table": rows}

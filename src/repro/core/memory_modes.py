@@ -1,0 +1,66 @@
+"""Memory-mode policies — the TPU analogue of KNL MCDRAM/NUMA configuration.
+
+KNL's boot-time memory modes decide how the fast near memory (16 GB MCDRAM)
+mediates access to far memory (192 GB DRAM).  A TPU has the same two-level
+structure per chip (VMEM ~128 MB fast, HBM 16 GB far) but the policy is set
+at *compile time*, not boot time.  The mapping (DESIGN.md §2):
+
+  near-memory policy ({cache, flat, hybrid})  ->  what stays resident:
+    cache  : XLA-managed staging; remat "dots" (matmul outputs saved —
+             HBM acts as backing store, recompute only cheap ops)
+    flat   : everything resident, no remat ("none") — max HBM footprint,
+             min recompute, like flat-mode's explicit allocation
+    hybrid : full remat ("full") + seq-sharded residuals — min footprint,
+             max recompute (half-and-half tradeoff)
+
+  NUMA hash ({all2all, quadrant, ...})  ->  how the matmul iteration space
+  tiles over VMEM (Pallas BlockSpec shapes + K-accumulation policy) — swept
+  in benchmarks/memory_modes.py and core/sweep.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+from repro.configs.base import ModelCfg
+
+
+@dataclass(frozen=True)
+class MemoryMode:
+    name: str
+    remat: str  # "none" | "dots" | "full"
+    # Pallas matmul tiling (the NUMA-hash analogue)
+    block: Tuple[int, int, int] = (512, 512, 512)  # (bm, bk, bn)
+    k_splits: int = 1  # 1 = single-pass accumulate ("cache"); >1 revisits C
+    moe_impl: str = "dispatch"  # "dispatch" | "ragged"
+
+    def vmem_bytes(self, dtype_bytes: int = 2) -> int:
+        """Working set one grid step keeps in VMEM (A, B tiles + f32 C)."""
+        bm, bk, bn = self.block
+        return bm * bk * dtype_bytes + bk * bn * dtype_bytes + bm * bn * 4
+
+
+# the three near-memory policies (× default tiling)
+CACHE = MemoryMode("cache", remat="dots")
+FLAT = MemoryMode("flat", remat="none")
+HYBRID = MemoryMode("hybrid", remat="full")
+
+MODES = {m.name: m for m in (CACHE, FLAT, HYBRID)}
+
+
+def apply(cfg: ModelCfg, mode: MemoryMode) -> ModelCfg:
+    return cfg.replace(remat=mode.remat)
+
+
+def tiling_grid(vmem_budget: int = 100 * 2**20):
+    """The '15 configurations' analogue: tilings × accumulation policies
+    that fit VMEM.  Returns [(name, MemoryMode)] for the sweep."""
+    out = []
+    for bm, bk, bn in [(256, 256, 256), (512, 512, 512), (512, 1024, 512),
+                       (1024, 512, 1024), (128, 2048, 128)]:
+        for k_splits, tag in [(1, "cache"), (2, "hybrid"), (8, "flat")]:
+            m = MemoryMode(f"b{bm}x{bk}x{bn}-{tag}", remat="dots",
+                           block=(bm, bk, bn), k_splits=k_splits)
+            if m.vmem_bytes() <= vmem_budget:
+                out.append(m)
+    return out

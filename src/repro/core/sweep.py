@@ -1,0 +1,192 @@
+"""The paper's experiment, on a TPU pod: matrix-multiply throughput swept
+over every factorization of the chip count into (Nproc × Nthread) at
+constant total memory.
+
+Mapping (DESIGN.md §2):
+  Nproc   -> data-parallel replicas (independent matmul instances)
+  Nthread -> model-parallel width inside one instance (how many chips one
+             ``C = A*B`` spreads over — OpenMP threads inside one BLAS call)
+  N = N0/√Nproc  -> identical protocol: constant total bytes across sweep
+  memory modes   -> placement (how B/C hash over the TP group: colsplit /
+                    inner / 2d ≈ all2all / hemisphere / quadrant) ×
+                    near-memory policy (cache = single-pass accumulate,
+                    hybrid = 2 K-passes, flat = 8 K-passes)
+
+Each cell is lowered + compiled on the fake-device mesh and scored by the
+three-term roofline (core/roofline.py) — the analytic analogue of the
+paper's GFLOPs plots in Figs. 4/5.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import hlo_cost
+from repro.core.roofline import HwSpec, V5E
+
+PLACEMENTS = ("colsplit", "inner", "2d")
+MEMORIES = {"cache": 1, "hybrid": 2, "flat": 8}
+
+
+@dataclass(frozen=True)
+class SweepCell:
+    nproc: int  # data-parallel replicas
+    nthread: int  # model-parallel width per replica
+    placement: str = "colsplit"
+    memory: str = "cache"
+    n0: int = 98304  # N = n0/√nproc (constant total bytes, paper protocol)
+    dtype: str = "bfloat16"
+
+    @property
+    def n(self) -> int:
+        return max(256, int(round(self.n0 / math.sqrt(self.nproc) / 256)) * 256)
+
+
+def factorizations(n_units: int) -> List:
+    """All power-of-two (Nproc, Nthread) splits of a pod (1×256 … 256×1)."""
+    out = []
+    p = 1
+    while p <= n_units:
+        out.append((p, n_units // p))
+        p *= 2
+    return out
+
+
+def _mesh_for(cell: SweepCell) -> Mesh:
+    n = cell.nproc * cell.nthread
+    devs = np.asarray(jax.devices()[:n])
+    if cell.placement == "2d" and cell.nthread > 1:
+        m1 = 2 ** (int(math.log2(cell.nthread)) // 2)
+        m2 = cell.nthread // m1
+        return Mesh(devs.reshape(cell.nproc, m1, m2), ("data", "mrow", "mcol"))
+    return Mesh(devs.reshape(cell.nproc, cell.nthread), ("data", "model"))
+
+
+def _matmul_fn(cell: SweepCell, k_splits: int):
+    def f(a, b):
+        if k_splits == 1:
+            return jnp.einsum("pij,pjk->pik", a, b)
+        # K-split accumulation: C revisited per pass ("flat"/"hybrid" modes)
+        chunks = jnp.split(a, k_splits, axis=2)
+        bchunks = jnp.split(b, k_splits, axis=1)
+        acc = jnp.zeros((a.shape[0], a.shape[1], b.shape[2]), jnp.float32)
+        for ac, bc in zip(chunks, bchunks):
+            acc = acc + jnp.einsum("pij,pjk->pik", ac, bc,
+                                   preferred_element_type=jnp.float32)
+        return acc.astype(a.dtype)
+
+    return f
+
+
+def _shardings(cell: SweepCell, mesh: Mesh):
+    if cell.placement == "colsplit":
+        a = P("data", None, None)  # A replicated over the TP group
+        b = P("data", None, "model")
+        c = P("data", None, "model")
+    elif cell.placement == "inner":
+        a = P("data", None, "model")  # contraction sharded -> all-reduce
+        b = P("data", "model", None)
+        c = P("data", None, None)
+    else:  # 2d
+        a = P("data", "mrow", None)
+        b = P("data", None, "mcol")
+        c = P("data", "mrow", "mcol")
+    return tuple(NamedSharding(mesh, s) for s in (a, b, c))
+
+
+def lower_cell(cell: SweepCell) -> Dict:
+    """Lower + compile one sweep cell; return roofline terms per device."""
+    mesh = _mesh_for(cell)
+    N = cell.n
+    dt = jnp.dtype(cell.dtype)
+    a = jax.ShapeDtypeStruct((cell.nproc, N, N), dt)
+    b = jax.ShapeDtypeStruct((cell.nproc, N, N), dt)
+    sa, sb, sc = _shardings(cell, mesh)
+    fn = _matmul_fn(cell, MEMORIES[cell.memory])
+    with mesh:
+        compiled = jax.jit(fn, in_shardings=(sa, sb),
+                           out_shardings=sc).lower(a, b).compile()
+    walked = hlo_cost.analyze(compiled.as_text())
+    mem = compiled.memory_analysis()
+    n_dev = mesh.devices.size
+    return {
+        "nproc": cell.nproc, "nthread": cell.nthread,
+        "placement": cell.placement, "memory": cell.memory, "N": N,
+        "flops_per_device": walked["flops"],
+        "bytes_per_device": walked["traffic_bytes"],
+        "collective_bytes_per_device": walked["collective_bytes"],
+        "peak_bytes": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                       + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+        "model_flops": 2.0 * cell.nproc * N ** 3,
+        "n_devices": n_dev,
+    }
+
+
+def score(row: Dict, hw: HwSpec = V5E) -> Dict:
+    """Paper-style efficiency: useful GF/s/chip vs practical peak."""
+    t_comp = row["flops_per_device"] / hw.peak_flops
+    t_mem = row["bytes_per_device"] / hw.hbm_bw
+    t_coll = row["collective_bytes_per_device"] / hw.ici_bw
+    t = max(t_comp, t_mem, t_coll, 1e-30)
+    useful = row["model_flops"] / row["n_devices"]
+    eff = useful / (t * hw.peak_flops)
+    return {**row, "compute_s": t_comp, "memory_s": t_mem,
+            "collective_s": t_coll,
+            "dominant": max([("compute", t_comp), ("memory", t_mem),
+                             ("collective", t_coll)], key=lambda kv: kv[1])[0],
+            "peak_fraction": min(eff, 1.0),
+            "gflops_per_chip": useful / t / 1e9}
+
+
+def run_sweep(n_units: int = 256, placements=PLACEMENTS,
+              memories=tuple(MEMORIES), n0: int = 98304,
+              splits: Optional[List] = None) -> List[Dict]:
+    rows = []
+    for nproc, nthread in (splits or factorizations(n_units)):
+        for pl_ in placements:
+            if pl_ == "2d" and nthread < 4:
+                continue
+            for mem in memories:
+                cell = SweepCell(nproc, nthread, pl_, mem, n0=n0)
+                rows.append(score(lower_cell(cell)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Measured mode (CPU wall clock — the benchmark harness entry)
+
+
+def measured_gflops(engine: str, nproc: int, n0: int = 2048, reps: int = 3,
+                    dtype=jnp.float32) -> Dict:
+    """Single-host measured analogue of Figs. 4/5: per-'process' matrix
+    N = n0/√nproc, batched matmul, wall-clock GFLOP/s.  engine: xla|pallas."""
+    import time
+
+    N = max(64, int(round(n0 / math.sqrt(nproc) / 64)) * 64)
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (nproc, N, N), dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (nproc, N, N), dtype)
+    if engine == "xla":
+        f = jax.jit(lambda a, b: jnp.einsum("pij,pjk->pik", a, b))
+    else:
+        from repro.kernels import ops
+
+        def f(a, b):
+            return jnp.stack([ops.matmul(a[i], b[i], block=(256, 256, 256))
+                              for i in range(a.shape[0])])
+    out = f(a, b)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f(a, b)
+    jax.block_until_ready(out)
+    dt_s = (time.perf_counter() - t0) / reps
+    gf = 2.0 * nproc * N ** 3 / dt_s / 1e9
+    return {"engine": engine, "nproc": nproc, "N": N,
+            "us_per_call": dt_s * 1e6, "gflops": gf}

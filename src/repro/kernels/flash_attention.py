@@ -1,0 +1,106 @@
+"""Flash attention (causal, GQA, optional sliding window) as a Pallas kernel.
+
+TPU adaptation of the classic GPU flash algorithm (DESIGN.md §2): instead of
+warp-level shuffles, the online softmax state (m, l, acc) lives in VMEM
+scratch across the sequential K-block grid dimension; the (bq × bk) score
+tile is MXU-shaped.  Fully-masked K blocks are skipped with pl.when — this
+is what removes the 2× causal overcount of the jnp fallback path (visible in
+EXPERIMENTS.md §Perf).
+
+Layouts: q (BH, S, hd); k, v (BKV, S, hd) with BH = B·kvH·G, BKV = B·kvH.
+Grid = (BH, nq, nk), K innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, nk: int, scale: float, window):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # causal block skip: K block strictly above the diagonal contributes 0
+    in_reach = k_start <= q_start + bq - 1
+    if window is not None:  # block entirely older than the window
+        in_reach &= (q_start - (k_start + bk - 1)) < window
+
+    @pl.when(in_reach)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale  # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)  # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = rows >= cols
+        if window is not None:
+            mask &= (rows - cols) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * corr
+                        + jax.lax.dot(p.astype(v_ref.dtype).astype(jnp.float32),
+                                      v_ref[0].astype(jnp.float32)))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "window", "interpret"))
+def flash_attention(q, k, v, *, bq: int = 128, bk: int = 128, window=None,
+                    interpret: bool = True):
+    """Causal flash attention.
+
+    q: (BH, S, hd); k, v: (BKV, S, hd); BH must be a multiple of BKV
+    (grouped queries).  Returns (BH, S, hd).
+    """
+    BH, S, hd = q.shape
+    BKV = k.shape[0]
+    assert BH % BKV == 0
+    G = BH // BKV
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+    scale = hd ** -0.5
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, nk=nk, scale=scale,
+                          window=window),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j: (h // G, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda h, i, j: (h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,101 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels target TPU and are validated in interpret mode per the brief).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul as _mm
+from repro.kernels import rmsnorm as _rn
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def matmul(a, b, *, block=(256, 256, 256), accum="vmem", out_dtype=None):
+    return _mm.matmul(a, b, block=block, accum=accum, interpret=_interpret(),
+                      out_dtype=out_dtype)
+
+
+def flash_attention(q, k, v, *, bq=128, bk=128, window=None):
+    return _fa.flash_attention(q, k, v, bq=bq, bk=bk, window=window,
+                               interpret=_interpret())
+
+
+def _flash_grouped_local(q, k, v, window):
+    """Single-shard grouped-layout kernel call.
+    q: (B,S,kvH,G,hd); k,v: (B,S,kvH,hd) -> (B,S,kvH,G,hd)."""
+    B, S, kvH, G, hd = q.shape
+    qk = jnp.moveaxis(q, 1, 3).reshape(B * kvH * G, S, hd)
+    kk = jnp.moveaxis(k, 1, 2).reshape(B * kvH, S, hd)
+    vk = jnp.moveaxis(v, 1, 2).reshape(B * kvH, S, hd)
+    bq = bk = max(min(128, S), 1)
+    o = flash_attention(qk, kk, vk, bq=bq, bk=bk, window=window)
+    return jnp.moveaxis(o.reshape(B, kvH, G, S, hd), 3, 1)
+
+
+def _flash_grouped_fwd_impl(q, k, v, window):
+    """Kernel forward, shard_mapped over the batch axes under a mesh (the
+    kernel is a per-device program; GSPMD cannot partition a pallas_call)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import current_mesh, current_rules
+
+    mesh = current_mesh()
+    if mesh is None:
+        return _flash_grouped_local(q, k, v, window)
+    batch_ax = current_rules().get("act_batch") or None
+    qs = P(batch_ax, None, None, None, None)
+    kvs = P(batch_ax, None, None, None)
+    return jax.shard_map(
+        lambda q, k, v: _flash_grouped_local(q, k, v, window),
+        mesh=mesh, in_specs=(qs, kvs, kvs), out_specs=qs,
+        check_vma=False)(q, k, v)
+
+
+def _ref_grouped(q, k, v, window):
+    """Memory-safe jnp oracle used for the backward pass (a production
+    deployment adds the flash backward kernel; the dominant fwd win — causal
+    block skipping — is already in the Pallas kernel)."""
+    from repro.models.layers.attention import _chunked_attn
+
+    S = q.shape[1]
+    pos = jnp.arange(S)
+    return _chunked_attn(q, k, v, pos, pos, True, window,
+                         min(128, S) if S % min(128, S) == 0 else S)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash_grouped(q, k, v, window):
+    return _flash_grouped_fwd_impl(q, k, v, window)
+
+
+def _flash_fwd(q, k, v, window):
+    return _flash_grouped_fwd_impl(q, k, v, window), (q, k, v)
+
+
+def _flash_bwd(window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: _ref_grouped(q, k, v, window), q, k, v)
+    return vjp(g)
+
+
+_flash_grouped.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_grouped(q, k, v, *, window=None):
+    """Differentiable grouped-layout flash attention (custom VJP).
+
+    q: (B,S,kvH,G,hd); k,v: (B,S,kvH,hd) -> (B,S,kvH,G,hd)."""
+    return _flash_grouped(q, k, v, window)
+
+
+def rmsnorm(x, scale, *, eps=1e-6):
+    return _rn.rmsnorm(x, scale, eps=eps, interpret=_interpret())

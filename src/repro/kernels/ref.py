@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, out_dtype=None):
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32))
+    return out.astype(out_dtype or a.dtype)
+
+
+def flash_attention_ref(q, k, v, window=None):
+    """q: (BH,S,hd); k,v: (BKV,S,hd). Causal softmax attention."""
+    BH, S, hd = q.shape
+    BKV = k.shape[0]
+    G = BH // BKV
+    kk = jnp.repeat(k, G, axis=0)
+    vv = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * (hd ** -0.5)
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = rows >= cols
+    if window is not None:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,307 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves (a) the sharding config is coherent (no GSPMD
+errors), (b) the program fits per-device HBM (memory_analysis), and
+(c) yields the FLOP/byte/collective numbers the roofline analysis consumes.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out runs/dryrun
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (SHAPES_BY_NAME, all_cells, get_config, input_specs,
+                           skip_reason, param_count, active_param_count)
+from repro.core import hlo_cost, memory_model
+from repro.configs.base import ShapeCfg
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim.adamw import AdamWCfg, init_opt_state
+from repro.optim.schedules import constant
+from repro.parallel.sharding import (make_rules, param_specs, use_mesh)
+from repro.serve.serve_step import decode_state_specs, make_serve_step
+from repro.train.train_step import (batch_specs, init_train_state,
+                                    make_train_step, train_state_specs)
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\b")
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _opt_cfg(cfg):
+    big = param_count(cfg) > 50e9 or cfg.param_dtype == "bfloat16"
+    return AdamWCfg(state_dtype="int8" if big else "float32")
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, save_hlo=None,
+               overrides=None):
+    """Lower + compile one cell. Returns a result dict (see keys below).
+
+    ``overrides``: ModelCfg.replace kwargs, plus the special keys
+      heads_tp     — shard attention heads over 'model' (rules-level)
+      microbatches — grad-accumulation count for train cells
+      moe_impl     — "dispatch" | "ragged" for every MoE block
+    """
+    overrides = dict(overrides or {})
+    heads_tp = overrides.pop("heads_tp", None)
+    microbatches = overrides.pop("microbatches", None)
+    moe_impl = overrides.pop("moe_impl", None)
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if moe_impl is not None:
+        cfg = _set_moe_impl(cfg, moe_impl)
+    shape = SHAPES_BY_NAME[shape_name]
+    if heads_tp is None:
+        # auto: shard attention heads over 'model' when every attention
+        # block's group count divides the TP width (glm4 on a 16-wide mesh)
+        model_size = mesh.shape.get("model", 1)
+        gs = [b.attn.num_heads // b.attn.num_kv_heads
+              for st in cfg.stages for b in st.pattern if b.attn is not None]
+        heads_tp = bool(gs) and all(g % model_size == 0 for g in gs)
+    long_ctx = shape.kind == "decode" and shape.global_batch < 8
+    rules = make_rules(mesh, decode=shape.kind == "decode", long_ctx=long_ctx,
+                       heads_tp=heads_tp)
+    if microbatches is None and shape.kind == "train":
+        microbatches = 8 if param_count(cfg) > 50e9 else 1
+    t0 = time.time()
+    with use_mesh(mesh, rules):
+        if shape.kind == "train":
+            lowered = _lower_train(cfg, shape, mesh, rules,
+                                   microbatches=microbatches or 1)
+        elif shape.kind == "prefill":
+            lowered = _lower_prefill(cfg, shape, mesh, rules)
+        else:
+            lowered = _lower_decode(cfg, shape, mesh, rules)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # loop-aware per-device costs (XLA's cost_analysis counts while bodies
+    # once — useless for scanned programs; see core/hlo_cost.py)
+    walked = hlo_cost.analyze(hlo)
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "n_devices": mesh.devices.size,
+        "params": param_count(cfg), "active_params": active_param_count(cfg),
+        "flops_per_device": walked["flops"],
+        "bytes_per_device": walked["traffic_bytes"],
+        "collective_bytes_per_device": walked["collective_bytes"],
+        "collective_breakdown": {k[5:]: v for k, v in walked.items()
+                                 if k.startswith("coll_")},
+        "xla_flops_per_device": cost.get("flops", 0.0),
+        "xla_bytes_per_device": cost.get("bytes accessed", 0.0),
+        "analytic_hbm_bytes": memory_model.estimate(
+            cfg, shape, dict(zip(mesh.axis_names, mesh.devices.shape)),
+            microbatches=microbatches or 1,
+        )["total"],
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_bytes": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                       + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    if save_hlo:
+        Path(save_hlo).parent.mkdir(parents=True, exist_ok=True)
+        Path(save_hlo).write_text(hlo)
+        res["hlo_path"] = str(save_hlo)
+    return res
+
+
+def _set_moe_impl(cfg, impl: str):
+    import dataclasses
+
+    def fix(blk):
+        if blk.moe is not None:
+            return dataclasses.replace(blk, moe=dataclasses.replace(
+                blk.moe, impl=impl))
+        return blk
+
+    stages = tuple(dataclasses.replace(st, pattern=tuple(fix(b) for b in st.pattern))
+                   for st in cfg.stages)
+    return cfg.replace(stages=stages)
+
+
+def collective_bytes(hlo_text: str) -> float:
+    """Sum result-shape bytes of every collective op in compiled HLO.
+
+    Parses post-SPMD optimized HLO: ``%name = <shape(s)> all-reduce(...)``.
+    Only the result shape (between '=' and the op name) is counted; async
+    '-done' halves are skipped to avoid double counting with '-start'.
+    """
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1]
+        op = COLLECTIVE_RE.search(rhs)
+        if op is None:
+            continue  # collective name appeared on the LHS only
+        if rhs[op.end():op.end() + 5] == "-done":
+            continue
+        total += _shape_bytes(rhs[: op.start()])
+    return total
+
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1}
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Per-kind lowering
+
+
+def _lower_train(cfg, shape: ShapeCfg, mesh, rules, microbatches=1):
+    opt_cfg = _opt_cfg(cfg)
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg))
+    sspecs = train_state_specs(state_shapes, rules)
+    bshapes = input_specs(cfg, shape)
+    bspecs = batch_specs(bshapes)
+    step = make_train_step(cfg, opt_cfg, constant(1e-4), microbatches=microbatches)
+    fn = jax.jit(step,
+                 in_shardings=(_ns(mesh, sspecs), _ns(mesh, bspecs)),
+                 out_shardings=(_ns(mesh, sspecs), None),
+                 donate_argnums=(0,))
+    return fn.lower(state_shapes, bshapes)
+
+
+def _lower_prefill(cfg, shape: ShapeCfg, mesh, rules):
+    bshapes = input_specs(cfg, shape)
+    bspecs = batch_specs(bshapes)
+    pshapes = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = param_specs(pshapes, rules=rules)
+
+    def fwd(params, batch):
+        logits, _ = M.forward(params, cfg, batch)
+        return logits
+
+    fn = jax.jit(fwd, in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)))
+    return fn.lower(pshapes, bshapes)
+
+
+def _lower_decode(cfg, shape: ShapeCfg, mesh, rules):
+    long_ctx = shape.global_batch < 8
+    pshapes = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    pspecs = param_specs(pshapes, rules=rules)
+    B = shape.global_batch
+    enc_shape = None
+    if cfg.frontend == "vision":
+        enc_shape = jax.ShapeDtypeStruct(
+            (B, cfg.n_img_tokens, cfg.d_model // 2), jnp.dtype(cfg.dtype))
+    if enc_shape is not None:
+        state_shapes = jax.eval_shape(
+            lambda p, e: M.init_decode_state(p, cfg, B, shape.seq_len,
+                                             enc_feats=e),
+            pshapes, enc_shape)
+    else:
+        state_shapes = jax.eval_shape(
+            lambda p: M.init_decode_state(p, cfg, B, shape.seq_len),
+            pshapes)
+    st_specs = decode_state_specs(state_shapes, rules)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_spec = P(rules["act_batch"], None) if rules["act_batch"] else P(None, None)
+    # all decode cells use the distributed flash-decode: the KV-cache seq dim
+    # is sharded ('model' normally; ('data','model') for batch=1 long ctx)
+    step = make_serve_step(cfg, sp_decode=True)
+    fn = jax.jit(step,
+                 in_shardings=(_ns(mesh, pspecs), _ns(mesh, st_specs),
+                               NamedSharding(mesh, tok_spec)),
+                 out_shardings=(None, _ns(mesh, st_specs)),
+                 donate_argnums=(1,))
+    return fn.lower(pshapes, state_shapes, tok)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = (list(all_cells()) if args.all
+             else [(args.arch, args.shape)])
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    results, failures = [], []
+    for arch, shape_name in cells:
+        r = skip_reason(arch, shape_name)
+        if r:
+            print(f"SKIP {arch} × {shape_name}: {r}")
+            continue
+        for multi in meshes:
+            mesh = make_production_mesh(multi_pod=multi)
+            tag = "multi" if multi else "single"
+            hlo = (out_dir / arch / f"{shape_name}.{tag}.hlo.txt"
+                   if args.save_hlo else None)
+            try:
+                res = lower_cell(arch, shape_name, mesh, save_hlo=hlo)
+                results.append(res)
+                # one cell per JSON line so partial runs are usable
+                with open(out_dir / "results.jsonl", "a") as f:
+                    f.write(json.dumps(res) + "\n")
+                print(f"OK   {arch} × {shape_name} × {tag}: "
+                      f"peak={res['peak_bytes']/2**30:.2f}GiB/dev "
+                      f"flops={res['flops_per_device']:.3g} "
+                      f"coll={res['collective_bytes_per_device']/2**30:.3f}GiB "
+                      f"(lower {res['lower_s']}s compile {res['compile_s']}s)",
+                      flush=True)
+            except Exception as e:
+                failures.append((arch, shape_name, tag, repr(e)))
+                print(f"FAIL {arch} × {shape_name} × {tag}: {e}", flush=True)
+                traceback.print_exc()
+
+    print(f"\n{len(results)} cells OK, {len(failures)} failed")
+    for f_ in failures:
+        print("  FAIL", *f_)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,33 @@
+"""Production mesh construction (as functions — importing this module never
+touches jax device state).
+
+The paper's `taskset` pinning maps here: ``pinned=True`` orders devices so
+that the 'model' axis (which carries the heaviest collectives) lands on
+physically contiguous chips of the ICI torus — see core/affinity.py for the
+topology model and the hop-cost scoring used by benchmarks/pinning.py.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False, pinned: bool = True):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if pinned:
+        try:
+            from jax.experimental import mesh_utils
+
+            devs = mesh_utils.create_device_mesh(shape)
+            return jax.sharding.Mesh(devs, axes)
+        except Exception:
+            pass  # CPU fake devices: fall through to enumeration order
+    devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def make_mesh(shape, axes, *, pinned: bool = True):
+    """Arbitrary mesh for sweeps/tests (e.g. (8,) or (4,2))."""
+    devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)

@@ -1,0 +1,41 @@
+"""Serving launcher: batched requests through the continuous-batching engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --requests 12
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config, skip_reason
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen2-1.5b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-tokens", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    if skip_reason(args.arch, "decode_32k"):
+        raise SystemExit(f"{args.arch}: {skip_reason(args.arch, 'decode_32k')}")
+    cfg = get_config(args.arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, batch_size=args.batch_size,
+                         cache_len=max(128, args.prompt_len + args.max_tokens))
+    rng = np.random.RandomState(0)
+    uids = [engine.submit(rng.randint(0, cfg.vocab_size, args.prompt_len),
+                          max_tokens=args.max_tokens)
+            for _ in range(args.requests)]
+    results = engine.run()
+    for uid in uids:
+        print(f"req {uid:3d}: {results[uid]}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

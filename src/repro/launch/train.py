@@ -1,0 +1,48 @@
+"""Training launcher: ``--arch <id>`` selects any assigned architecture.
+
+Single-host (reduced/smoke widths):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke --steps 50
+
+On a pod slice the same entry point runs the full config under
+make_production_mesh(); this container is CPU-only, so full-size runs are
+exercised via the dry-run (launch/dryrun.py) instead.
+"""
+import argparse
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs.base import ShapeCfg, SHAPES_BY_NAME
+from repro.optim.adamw import AdamWCfg
+from repro.train.loop import TrainLoop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, required=True)
+    ap.add_argument("--shape", default=None,
+                    help="assigned shape name (e.g. train_4k); default: tiny")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--int8-opt", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.shape:
+        shape = SHAPES_BY_NAME[args.shape]
+    else:
+        shape = ShapeCfg("tiny", 64, 8, "train")
+    opt = AdamWCfg(state_dtype="int8" if args.int8_opt else "float32")
+    loop = TrainLoop(cfg, shape, opt_cfg=opt, lr=args.lr,
+                     total_steps=args.steps, microbatches=args.microbatches,
+                     ckpt_dir=args.ckpt_dir)
+    hist = loop.run(args.steps)
+    print(f"{cfg.name}: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "
+          f"({args.steps} steps)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,20 @@
+"""Shared initializers / dtype helpers for the functional layer library."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun-style), stored in fp32."""
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = (1.0 / max(1, fan_in)) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)).astype(dtype)
+
+
+def cast(x, dtype_str):
+    return x.astype(jnp.dtype(dtype_str))

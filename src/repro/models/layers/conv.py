@@ -1,0 +1,27 @@
+"""Causal depthwise 1-D convolution (shared by Mamba and mLSTM blocks)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_depthwise_conv(x, conv_w, conv_b):
+    """x: (B,S,C); conv_w: (K,C); conv_b: (C,). Causal (left-pad K-1)."""
+    K = conv_w.shape[0]
+    dt = x.dtype
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # sum of shifted slices — K is tiny (4), unrolled adds beat a grouped conv
+    out = jnp.zeros_like(x)
+    S = x.shape[1]
+    for i in range(K):
+        out = out + xp[:, i : i + S, :] * conv_w[i].astype(dt)
+    return out + conv_b.astype(dt)
+
+
+def conv_step(x_t, state, conv_w, conv_b):
+    """Single decode step. x_t: (B,C); state: (B,K-1,C) past inputs."""
+    dt = x_t.dtype
+    K = conv_w.shape[0]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", window, conv_w.astype(dt)) + conv_b.astype(dt)
+    return out, window[:, 1:, :]

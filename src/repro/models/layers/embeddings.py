@@ -1,0 +1,80 @@
+"""Token embeddings, output heads, RoPE, and modality-frontend stubs.
+
+``[audio]`` / ``[vlm]`` archs specify the transformer backbone only; the
+modality frontend is a STUB — ``input_specs()`` provides precomputed
+frame/patch embeddings, and ``frontend_proj`` maps them into ``d_model``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.common import dense_init, embed_init
+from repro.parallel.sharding import lshard
+
+
+def init_tok_embed(key, vocab: int, d: int):
+    return {"tok_embed": embed_init(key, (vocab, d))}
+
+
+def embed_tokens(params, tokens, dtype):
+    # one-hot matmul keeps the vocab-sharded table local (no gather over
+    # the 'model' axis); XLA folds this to a take on a single device.
+    emb = params["tok_embed"].astype(dtype)
+    out = jnp.take(emb, tokens, axis=0)
+    return lshard(out, "act_batch", "act_seq", None)
+
+
+def init_out_head(key, d: int, vocab: int):
+    return {"out_head": dense_init(key, (d, vocab))}
+
+
+def logits_from_hidden(params, h, *, tied_embed=None):
+    """(B,S,D) -> (B,S,V) with V sharded over 'model' (never replicated)."""
+    if tied_embed is not None:
+        w = tied_embed.T.astype(h.dtype)
+    else:
+        w = params["out_head"].astype(h.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", h, w)
+    return lshard(logits, "act_batch", "act_seq", "act_vocab")
+
+
+def init_frontend(key, d_in: int, d: int):
+    """Modality frontend stub: a single linear projection of precomputed
+    frame/patch embeddings into d_model."""
+    return {"frontend_proj": dense_init(key, (d_in, d))}
+
+
+def apply_frontend(params, feats, dtype):
+    w = params["frontend_proj"].astype(dtype)
+    return jnp.einsum("bsf,fd->bsd", feats.astype(dtype), w)
+
+
+# ---------------------------------------------------------------------------
+# Positional encodings
+
+
+def sinusoidal_pos(seq_len: int, d: int, dtype, offset=0):
+    pos = jnp.arange(seq_len) + offset
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / half)
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, *head_axes, hd); positions: (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[:, None].astype(jnp.float32) * freqs  # (S, hd/2)
+    # broadcast (S, hd/2) -> (1, S, 1...1, hd/2) against x
+    shape = (1, x.shape[1]) + (1,) * (x.ndim - 3) + (hd // 2,)
+    cos = jnp.cos(ang).reshape(shape)
+    sin = jnp.sin(ang).reshape(shape)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

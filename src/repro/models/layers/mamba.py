@@ -1,0 +1,141 @@
+"""Mamba-1 selective SSM mixer (Jamba's sequence mixer).
+
+The recurrence is evaluated with a time-major ``lax.scan`` that builds the
+(B, d_in, d_state) discretized operands *per step* — the (B,S,d_in,d_state)
+tensor is never materialized (it would be ~PB-scale at jamba sizes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaCfg
+from repro.models.layers.common import dense_init
+from repro.models.layers.conv import causal_depthwise_conv, conv_step
+from repro.parallel.sharding import lshard
+
+
+def _dims(d: int, cfg: MambaCfg):
+    d_in = cfg.expand * d
+    dt_rank = cfg.dt_rank or -(-d // 16)
+    return d_in, dt_rank
+
+
+def init_mamba(key, d: int, cfg: MambaCfg):
+    d_in, dt_rank = _dims(d, cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in)),
+        "conv_w": dense_init(ks[1], (cfg.d_conv, d_in), in_axis_size=cfg.d_conv),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "x_proj": dense_init(ks[2], (d_in, dt_rank + 2 * cfg.d_state), in_axis_size=d_in),
+        "dt_w": dense_init(ks[3], (dt_rank, d_in), in_axis_size=dt_rank),
+        "dt_b": jnp.full((d_in,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32), (d_in, cfg.d_state)
+        ).copy()),
+        "ssm_D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_in, d), in_axis_size=d_in),
+    }
+    return p
+
+
+def _preprocess(params, cfg: MambaCfg, x):
+    """Everything before the recurrence (parallel over time)."""
+    dt_ = x.dtype
+    d_in, dt_rank = _dims(x.shape[-1], cfg)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    xz = lshard(xz, "act_batch", "act_seq", "act_ff")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    return x_in, z, d_in, dt_rank
+
+
+def _ssm_inputs(params, cfg: MambaCfg, x_c, dt_rank):
+    dt_ = x_c.dtype
+    proj = jnp.einsum("bse,ep->bsp", x_c, params["x_proj"].astype(dt_))
+    dt_low, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + cfg.d_state], axis=-1)
+    dt_full = jnp.einsum("bsp,pe->bse", dt_low, params["dt_w"].astype(dt_))
+    dt = jax.nn.softplus(dt_full.astype(jnp.float32) + params["dt_b"])
+    return dt, Bmat.astype(jnp.float32), Cmat.astype(jnp.float32)
+
+
+def mamba_fwd(params, cfg: MambaCfg, x, chunk: int = 64):
+    """x: (B,S,D) -> (B,S,D).
+
+    Nested scan (chunks × steps) with remat on the chunk body: the selective
+    recurrence is sequential (data-dependent elementwise decay has no cheap
+    parallel form for Mamba-1), but backward-pass residuals are bounded to
+    S/chunk state snapshots instead of S (the flat scan stores the (B,d_in,N)
+    carry per step — PB-scale at jamba sizes).
+    """
+    B, S, D = x.shape
+    dt_ = x.dtype
+    x_in, z, d_in, dt_rank = _preprocess(params, cfg, x)
+    x_c = jax.nn.silu(causal_depthwise_conv(x_in, params["conv_w"], params["conv_b"]))
+    dt, Bmat, Cmat = _ssm_inputs(params, cfg, x_c, dt_rank)
+    A = -jnp.exp(params["A_log"])  # (d_in, N)
+
+    # scan inputs stay in the model dtype (bf16 in production) — f32 copies
+    # of (B,S,d_in) tensors are residual-storage poison at jamba scale;
+    # the step upcasts per-timestep.  The state h and outputs y_t keep the
+    # d_in axis sharded over 'model' (without the constraint GSPMD leaves
+    # the whole recurrence replicated across the TP axis).
+    def step(h, xs):
+        x_t, dt_t, B_t, C_t = (t.astype(jnp.float32) for t in xs)
+        dA = jnp.exp(dt_t[:, :, None] * A[None])  # (B,d_in,N)
+        dBx = (dt_t * x_t)[:, :, None] * B_t[:, None, :]
+        h = lshard(dA * h + dBx, "act_batch", "act_ff", None)
+        y_t = jnp.einsum("ben,bn->be", h, C_t).astype(dt_)
+        return h, lshard(y_t, "act_batch", "act_ff")
+
+    L = min(chunk, S)
+    if S % L:
+        L = S
+    nc = S // L
+
+    def inner(h, xs_chunk):
+        return jax.lax.scan(step, h, xs_chunk)
+
+    inner = jax.checkpoint(inner, prevent_cse=False)
+    h0 = jnp.zeros((B, d_in, cfg.d_state), jnp.float32)
+    h0 = lshard(h0, "act_batch", "act_ff", None)
+    xs = tuple(jnp.swapaxes(jnp.moveaxis(t.astype(dt_).reshape(B, nc, L, t.shape[-1]), 1, 0), 1, 2)
+               for t in (x_c, dt, Bmat, Cmat))  # (nc, L, B, F)
+    _, ys = jax.lax.scan(inner, h0, xs)  # (nc, L, B, d_in)
+    y = jnp.moveaxis(ys, 2, 0).reshape(B, S, d_in)
+    y = lshard(y, "act_batch", "act_seq", "act_ff")
+    y = (y + (x_c * params["ssm_D"].astype(dt_)).astype(dt_)) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    return lshard(out, "act_batch", "act_seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+
+
+def init_mamba_state(cfg: MambaCfg, d: int, batch: int, dtype):
+    d_in, _ = _dims(d, cfg)
+    return {
+        "h": jnp.zeros((batch, d_in, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_in), dtype),
+    }
+
+
+def mamba_decode(params, cfg: MambaCfg, x_t, state):
+    """x_t: (B,1,D) -> (B,1,D)."""
+    B = x_t.shape[0]
+    dt_ = x_t.dtype
+    x_in, z, d_in, dt_rank = _preprocess(params, cfg, x_t)
+    x_in, z = x_in[:, 0], z[:, 0]
+    xc_t, conv_state = conv_step(x_in, state["conv"], params["conv_w"], params["conv_b"])
+    xc_t = jax.nn.silu(xc_t)
+    dt, Bmat, Cmat = _ssm_inputs(params, cfg, xc_t[:, None, :], dt_rank)
+    dt_t, B_t, C_t = dt[:, 0], Bmat[:, 0], Cmat[:, 0]
+    A = -jnp.exp(params["A_log"])
+    xf = xc_t.astype(jnp.float32)
+    dA = jnp.exp(dt_t[:, :, None] * A[None])
+    h = dA * state["h"] + (dt_t * xf)[:, :, None] * B_t[:, None, :]
+    y = jnp.einsum("ben,bn->be", h, C_t) + xf * params["ssm_D"]
+    y = y.astype(dt_) * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y, params["out_proj"].astype(dt_))[:, None, :]
+    return lshard(out, "act_batch", "act_seq", None), {"h": h, "conv": conv_state}

@@ -1,0 +1,37 @@
+"""Dense FFN (optionally gated / SwiGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLPCfg
+from repro.models.layers.common import dense_init
+from repro.parallel.sharding import lshard
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def init_mlp(key, d: int, cfg: MLPCfg):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d, cfg.d_ff)),
+        "w_down": dense_init(ks[1], (cfg.d_ff, d), in_axis_size=cfg.d_ff),
+    }
+    if cfg.gated:
+        p["w_gate"] = dense_init(ks[2], (d, cfg.d_ff))
+    return p
+
+
+def mlp_fwd(params, cfg: MLPCfg, x):
+    dt = x.dtype
+    act = _ACTS[cfg.act]
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+    up = lshard(up, "act_batch", "act_seq", "act_ff")
+    if cfg.gated:
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+        gate = lshard(gate, "act_batch", "act_seq", "act_ff")
+        h = act(gate) * up
+    else:
+        h = act(up)
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dt))
+    return lshard(out, "act_batch", "act_seq", None)

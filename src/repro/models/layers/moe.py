@@ -1,0 +1,141 @@
+"""Mixture-of-Experts FFN.
+
+Baseline (paper-era, GSPMD-friendly) implementation: capacity-bounded
+dispatch/combine einsums (Mesh-TensorFlow / MaxText style).  Experts are
+sharded over the 'model' axis (EP); tokens stay batch-sharded over 'data',
+and because activations are replicated across 'model', each chip builds the
+dispatch slice for *its* experts locally — no all-to-all in the baseline.
+
+A dropless ``ragged_dot`` path (``impl="ragged"``) is provided as the
+beyond-paper optimized variant (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoECfg
+from repro.models.layers.common import dense_init
+from repro.models.layers.mlp import init_mlp, mlp_fwd
+from repro.parallel.sharding import lshard
+
+
+def init_moe(key, d: int, cfg: MoECfg):
+    ks = jax.random.split(key, 5)
+    E, F = cfg.num_experts, cfg.d_ff
+    p = {
+        "router": dense_init(ks[0], (d, E)),
+        "we_gate": dense_init(ks[1], (E, d, F), in_axis_size=d),
+        "we_up": dense_init(ks[2], (E, d, F), in_axis_size=d),
+        "we_down": dense_init(ks[3], (E, F, d), in_axis_size=F),
+    }
+    if cfg.dense_residual is not None:
+        p["dense"] = init_mlp(ks[4], d, cfg.dense_residual)
+    return p
+
+
+def _route(params, cfg: MoECfg, x):
+    """Router in f32. Returns (gates (B,S,k), idx (B,S,k), probs (B,S,E))."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    if cfg.top_k > 1:
+        gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+    return gates, idx, probs, logits
+
+
+def _aux_losses(probs, idx, logits, num_experts: int):
+    """Load-balance loss (Switch-style) + router z-loss."""
+    # fraction of tokens routed (top-1 assignment) per expert
+    top1 = idx[..., 0]
+    load = jnp.mean(jax.nn.one_hot(top1, num_experts, dtype=jnp.float32), axis=(0, 1))
+    importance = jnp.mean(probs, axis=(0, 1))
+    lb = num_experts * jnp.sum(load * importance)
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return {"moe_lb_loss": lb, "moe_z_loss": z}
+
+
+def moe_fwd(params, cfg: MoECfg, x) -> Tuple[jax.Array, dict]:
+    if cfg.impl == "ragged":
+        return _moe_fwd_ragged(params, cfg, x)
+    return _moe_fwd_dispatch(params, cfg, x)
+
+
+def _moe_fwd_dispatch(params, cfg: MoECfg, x) -> Tuple[jax.Array, dict]:
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    dt = x.dtype
+    gates, idx, probs, logits = _route(params, cfg, x)
+    aux = _aux_losses(probs, idx, logits, E)
+
+    # capacity per (batch-row) group of S tokens
+    C = max(k, int(-(-S * k * cfg.capacity_factor // E)))
+
+    # flatten the k slots: (B, S*k) routing decisions, priority = token order
+    flat_idx = idx.reshape(B, S * k)
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)  # (B, S*k, E)
+    pos = jnp.cumsum(onehot, axis=1) * onehot - 1  # position within expert
+    keep = (pos >= 0) & (pos < C)
+    pos = jnp.where(keep, pos, C)  # overflow slot (sliced away by one_hot)
+
+    # dispatch tensor (B, S*k, E, C) — E sharded over 'model'
+    disp = jax.nn.one_hot(pos, C, dtype=dt) * onehot.astype(dt)[..., None]
+    disp = disp.reshape(B, S, k, E, C)
+    dispatch = jnp.sum(disp, axis=2)  # (B,S,E,C)
+    combine = jnp.sum(disp * gates.astype(dt)[..., None, None], axis=2)
+    dispatch = lshard(dispatch, "act_batch", None, "act_expert", None)
+    combine = lshard(combine, "act_batch", None, "act_expert", None)
+
+    # expert compute, local in (data=batch, model=expert) tiles
+    xin = jnp.einsum("bsec,bsd->becd", dispatch, x)
+    xin = lshard(xin, "act_batch", "act_expert", None, None)
+    g = jnp.einsum("becd,edf->becf", xin, params["we_gate"].astype(dt))
+    u = jnp.einsum("becd,edf->becf", xin, params["we_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = lshard(h, "act_batch", "act_expert", None, None)
+    eo = jnp.einsum("becf,efd->becd", h, params["we_down"].astype(dt))
+    y = jnp.einsum("becd,bsec->bsd", eo, combine)
+    y = lshard(y, "act_batch", "act_seq", None)
+
+    if cfg.dense_residual is not None:
+        y = y + mlp_fwd(params["dense"], cfg.dense_residual, x)
+    return y, aux
+
+
+def _moe_fwd_ragged(params, cfg: MoECfg, x) -> Tuple[jax.Array, dict]:
+    """Dropless MoE via sort + ragged_dot (beyond-paper optimized path).
+
+    Tokens (replicated over 'model') are sorted by expert id; each chip runs
+    ragged group-matmuls for its expert shard.  No capacity, no drops.
+    """
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    dt = x.dtype
+    gates, idx, probs, logits = _route(params, cfg, x)
+    aux = _aux_losses(probs, idx, logits, E)
+
+    T = B * S
+    xt = x.reshape(T, D)
+    flat_idx = idx.reshape(T * k)
+    flat_gate = gates.reshape(T * k).astype(dt)
+    order = jnp.argsort(flat_idx)
+    inv = jnp.argsort(order)
+    tok_of = order // k  # source token for each sorted slot
+    xs = jnp.take(xt, tok_of, axis=0)  # (T*k, D)
+    group_sizes = jnp.bincount(flat_idx, length=E).astype(jnp.int32)
+
+    g = jax.lax.ragged_dot(xs, params["we_gate"].astype(dt), group_sizes)
+    u = jax.lax.ragged_dot(xs, params["we_up"].astype(dt), group_sizes)
+    h = jax.nn.silu(g) * u
+    eo = jax.lax.ragged_dot(h, params["we_down"].astype(dt), group_sizes)
+
+    eo = jnp.take(eo, inv, axis=0) * flat_gate[:, None]  # back to slot order
+    y = jnp.sum(eo.reshape(T, k, D), axis=1).reshape(B, S, D)
+    y = lshard(y, "act_batch", "act_seq", None)
+
+    if cfg.dense_residual is not None:
+        y = y + mlp_fwd(params["dense"], cfg.dense_residual, x)
+    return y, aux

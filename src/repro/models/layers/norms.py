@@ -1,0 +1,21 @@
+"""RMSNorm (the framework's only norm; all assigned archs are RMSNorm-family)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6, *, use_kernel: bool = False):
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.rmsnorm(x, params["scale"], eps=eps)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dtype)

@@ -1,0 +1,301 @@
+"""xLSTM mixers: mLSTM (matrix memory) and sLSTM (scalar memory with
+recurrence), after arXiv:2405.04517.
+
+Training-time mLSTM uses the **chunkwise-parallel form** (linear attention
+with decay): intra-chunk work is a masked (L×L) quadratic form, inter-chunk
+state is a (B,nh,hd,hd) recurrence at chunk granularity.  This bounds the
+backward-pass residulas to S/L chunk boundaries instead of S timesteps —
+the sequential scan stores the matrix memory C per step, which is ~240 GiB
+per device at train_4k scale (measured; see EXPERIMENTS.md §Perf).
+A sequential reference (``mlstm_fwd_seq``) is kept as the test oracle.
+
+Simplifications (noted in DESIGN.md): sLSTM's block-diagonal recurrent matrix
+is dense here; both use stabilized exponential gating as in the paper, with
+the C̄ = C/exp(m) storage convention (m₀ = 0, denominator floor exp(-m)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XLSTMCfg
+from repro.models.layers.common import dense_init
+from repro.models.layers.conv import causal_depthwise_conv, conv_step
+from repro.parallel.sharding import lshard
+
+_CONV_K = 4
+NEG = -1e30
+
+
+def _mlstm_dims(d: int, cfg: XLSTMCfg):
+    d_in = int(cfg.proj_factor * d)
+    hd = d_in // cfg.num_heads
+    return d_in, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+
+
+def init_mlstm(key, d: int, cfg: XLSTMCfg):
+    d_in, hd = _mlstm_dims(d, cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * d_in)),
+        "conv_w": dense_init(ks[1], (_CONV_K, d_in), in_axis_size=_CONV_K),
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "xq": dense_init(ks[2], (d_in, d_in)),
+        "xk": dense_init(ks[3], (d_in, d_in)),
+        "xv": dense_init(ks[4], (d_in, d_in)),
+        "wi": dense_init(ks[5], (d_in, cfg.num_heads)),
+        "wf": dense_init(ks[6], (d_in, cfg.num_heads)),
+        "bi": jnp.zeros((cfg.num_heads,), jnp.float32),
+        "bf": jnp.full((cfg.num_heads,), 3.0, jnp.float32),  # open forget gates
+        "out_norm": {"scale": jnp.ones((hd,), jnp.float32)},
+        "down_proj": dense_init(ks[7], (d_in, d), in_axis_size=d_in),
+    }
+
+
+def _mlstm_qkv_gates(params, cfg: XLSTMCfg, x_c, x_m):
+    """x_c, x_m: (B,S,d_in) -> q,k,v (B,S,nh,hd); log-i, log-f (B,S,nh) f32."""
+    B, S, d_in = x_c.shape
+    nh = cfg.num_heads
+    hd = d_in // nh
+    dt = x_c.dtype
+    q = jnp.einsum("bse,ef->bsf", x_c, params["xq"].astype(dt)).reshape(B, S, nh, hd)
+    k = jnp.einsum("bse,ef->bsf", x_c, params["xk"].astype(dt)).reshape(B, S, nh, hd)
+    v = jnp.einsum("bse,ef->bsf", x_m, params["xv"].astype(dt)).reshape(B, S, nh, hd)
+    k = k * (hd ** -0.5)
+    i_pre = (jnp.einsum("bse,eh->bsh", x_c.astype(jnp.float32), params["wi"])
+             + params["bi"])
+    f_pre = (jnp.einsum("bse,eh->bsh", x_c.astype(jnp.float32), params["wf"])
+             + params["bf"])
+    f_pre = jax.nn.log_sigmoid(f_pre)  # log f-gate (≤ 0)
+    return q, k, v, i_pre, f_pre
+
+
+def _mlstm_cell(C, n, m, q_t, k_t, v_t, i_pre, f_pre):
+    """One stabilized step (decode & test oracle).  C is the scaled memory C̄.
+    Shapes: C (B,nh,hd,hd); q/k/v (B,nh,hd); i/f log-preacts (B,nh)."""
+    m_new = jnp.maximum(f_pre + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)[..., None]  # (B,nh,1)
+    f_g = jnp.exp(f_pre + m - m_new)[..., None]
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k_t, v_t, q_t))
+    C = f_g[..., None] * C + i_g[..., None] * vf[..., :, None] * kf[..., None, :]
+    n = f_g * n + i_g * kf
+    num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den  # (B,nh,hd)
+    return C, n, m_new, h
+
+
+def _mlstm_chunk(carry, xs):
+    """Chunkwise-parallel mLSTM step.  carry: (C̄ (B,nh,hd,hd), n̄ (B,nh,hd),
+    m (B,nh)); xs: q,k,v (B,nh,L,hd) + log-i a, log-f g (B,nh,L)."""
+    C, n, m = carry
+    q, k, v, a, g = xs
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    L = q.shape[2]
+    b = jnp.cumsum(g, axis=-1)  # (B,nh,L) inclusive decay
+    bL = b[..., -1:]
+
+    # intra-chunk log weights D_tj = b_t - b_j + a_j (j ≤ t)
+    D = b[..., :, None] - b[..., None, :] + a[..., None, :]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(causal, D, NEG)
+
+    scale = b + m[..., None]  # log weight of the incoming state per position
+    m_t = jnp.maximum(jnp.max(D, axis=-1), scale)  # (B,nh,L)
+
+    w_intra = jnp.exp(D - m_t[..., None])  # (B,nh,L,L)
+    w_inter = jnp.exp(scale - m_t)  # (B,nh,L)
+
+    qk = jnp.einsum("bhld,bhjd->bhlj", qf, kf)
+    num = (jnp.einsum("bhlj,bhjd->bhld", w_intra * qk, vf)
+           + jnp.einsum("bhvk,bhlk->bhlv", C, qf) * w_inter[..., None])
+    den_dot = (jnp.einsum("bhlj,bhlj->bhl", w_intra, qk)
+               + jnp.einsum("bhk,bhlk->bhl", n, qf) * w_inter)
+    h = num / jnp.maximum(jnp.abs(den_dot), jnp.exp(-m_t))[..., None]
+
+    # chunk-end state
+    a_rev = a + bL - b  # log weight of j's contribution at chunk end
+    m_out = jnp.maximum((bL + m[..., None])[..., 0], jnp.max(a_rev, axis=-1))
+    w_end = jnp.exp(a_rev - m_out[..., None])  # (B,nh,L)
+    decay = jnp.exp(bL[..., 0] + m - m_out)  # (B,nh)
+    C = (decay[..., None, None] * C
+         + jnp.einsum("bhjv,bhjk,bhj->bhvk", vf, kf, w_end))
+    n = decay[..., None] * n + jnp.einsum("bhjk,bhj->bhk", kf, w_end)
+    return (C, n, m_out), h
+
+
+def mlstm_fwd(params, cfg: XLSTMCfg, x, chunk: int = 128):
+    B, S, D = x.shape
+    dt = x.dtype
+    d_in, hd = _mlstm_dims(D, cfg)
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"].astype(dt))
+    up = lshard(up, "act_batch", "act_seq", "act_ff")
+    x_m, z = jnp.split(up, 2, axis=-1)
+    x_c = jax.nn.silu(causal_depthwise_conv(x_m, params["conv_w"], params["conv_b"]))
+    q, k, v, a, g = _mlstm_qkv_gates(params, cfg, x_c, x_m)
+
+    nh = cfg.num_heads
+    L = min(chunk, S)
+    if S % L:
+        L = S  # fall back to a single chunk for odd test lengths
+    nc = S // L
+
+    def to_chunks(t):  # (B,S,nh,...) -> (nc,B,nh,L,...)
+        t = t.reshape(B, nc, L, nh, *t.shape[3:])
+        return jnp.moveaxis(jnp.swapaxes(t, 2, 3), 1, 0)
+
+    xs = (to_chunks(q), to_chunks(k), to_chunks(v),
+          to_chunks(a[..., None])[..., 0], to_chunks(g[..., None])[..., 0])
+    C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, nh, hd), jnp.float32)
+    m0 = jnp.zeros((B, nh), jnp.float32)
+    body = jax.checkpoint(_mlstm_chunk, prevent_cse=False)
+    _, hs = jax.lax.scan(body, (C0, n0, m0), xs)
+    # hs: (nc,B,nh,L,hd) -> (B,S,nh,hd)
+    h = jnp.moveaxis(hs, 0, 1).swapaxes(2, 3).reshape(B, S, nh, hd)
+    h = _head_norm(params, h).reshape(B, S, d_in).astype(dt)
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, params["down_proj"].astype(dt))
+    return lshard(out, "act_batch", "act_seq", None)
+
+
+def mlstm_fwd_seq(params, cfg: XLSTMCfg, x):
+    """Sequential-scan reference (test oracle; memory-unsafe at scale)."""
+    B, S, D = x.shape
+    dt = x.dtype
+    d_in, hd = _mlstm_dims(D, cfg)
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"].astype(dt))
+    x_m, z = jnp.split(up, 2, axis=-1)
+    x_c = jax.nn.silu(causal_depthwise_conv(x_m, params["conv_w"], params["conv_b"]))
+    q, k, v, a, g = _mlstm_qkv_gates(params, cfg, x_c, x_m)
+
+    def step(carry, xs):
+        C, n, m = carry
+        q_t, k_t, v_t, ip, fp = xs
+        C, n, m, h = _mlstm_cell(C, n, m, q_t, k_t, v_t, ip, fp)
+        return (C, n, m), h
+
+    nh = cfg.num_heads
+    C0 = jnp.zeros((B, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, nh, hd), jnp.float32)
+    m0 = jnp.zeros((B, nh), jnp.float32)
+    # time-major xs: (S,B,nh,hd) for q/k/v, (S,B,nh) for gates
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, a, g))
+    _, hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1)  # (B,S,nh,hd) f32
+    h = _head_norm(params, h).reshape(B, S, d_in).astype(dt)
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, params["down_proj"].astype(dt))
+    return out
+
+
+def _head_norm(params, h):
+    """RMS-norm over hd, per head. h: (..., nh, hd) f32."""
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    return h * jax.lax.rsqrt(var + 1e-6) * params["out_norm"]["scale"]
+
+
+def init_mlstm_state(cfg: XLSTMCfg, d: int, batch: int, dtype):
+    d_in, hd = _mlstm_dims(d, cfg)
+    nh = cfg.num_heads
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.zeros((batch, nh), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_K - 1, d_in), dtype),
+    }
+
+
+def mlstm_decode(params, cfg: XLSTMCfg, x_t, state):
+    B, _, D = x_t.shape
+    dt = x_t.dtype
+    d_in, hd = _mlstm_dims(D, cfg)
+    up = jnp.einsum("bsd,de->bse", x_t, params["up_proj"].astype(dt))
+    x_m, z = jnp.split(up[:, 0], 2, axis=-1)
+    xc, conv_state = conv_step(x_m, state["conv"], params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+    q, k, v, i_pre, f_pre = _mlstm_qkv_gates(params, cfg, xc[:, None], x_m[:, None])
+    C, n, m, h = _mlstm_cell(state["C"], state["n"], state["m"],
+                             q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0])
+    h = _head_norm(params, h).reshape(B, d_in).astype(dt) * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", h, params["down_proj"].astype(dt))[:, None]
+    new = {"C": C, "n": n, "m": m, "conv": conv_state}
+    return lshard(out, "act_batch", "act_seq", None), new
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+
+
+def init_slstm(key, d: int, cfg: XLSTMCfg):
+    ks = jax.random.split(key, 2)
+    b = jnp.zeros((4 * d,), jnp.float32)
+    b = b.at[d : 2 * d].set(3.0)  # forget-gate bias
+    return {
+        "w_ifzo": dense_init(ks[0], (d, 4 * d)),
+        "r_ifzo": dense_init(ks[1], (d, 4 * d)),
+        "b_ifzo": b,
+    }
+
+
+def _slstm_cell(params, carry, wx_t):
+    """carry: (h,c,n,m) each (B,D) f32; wx_t: (B,4D) f32 precomputed x@W."""
+    h, c, n, m = carry
+    raw = wx_t + h @ params["r_ifzo"] + params["b_ifzo"]
+    i_pre, f_pre, z_pre, o_pre = jnp.split(raw, 4, axis=-1)
+    f_pre = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(f_pre + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(f_pre + m - m_new)
+    c = f_g * c + i_g * jnp.tanh(z_pre)
+    n = f_g * n + i_g
+    h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1.0)
+    return (h, c, n, m_new)
+
+
+def slstm_fwd(params, cfg: XLSTMCfg, x, chunk: int = 64):
+    """Nested scan (chunks × steps) with remat on the chunk body: backward
+    stores only S/chunk boundary carries (the recurrence is inherently
+    sequential — no parallel form exists for h-recurrent sLSTM)."""
+    B, S, D = x.shape
+    dt = x.dtype
+    wx = jnp.einsum("bsd,df->bsf", x.astype(jnp.float32), params["w_ifzo"])
+
+    L = min(chunk, S)
+    if S % L:
+        L = S
+    nc = S // L
+    wx_c = jnp.moveaxis(wx.reshape(B, nc, L, 4 * D), 1, 0)  # (nc,B,L,4D)
+
+    def inner(carry, wx_chunk):
+        def step(c, wx_t):
+            c = _slstm_cell(params, c, wx_t)
+            return c, c[0]
+
+        return jax.lax.scan(step, carry, jnp.moveaxis(wx_chunk, 1, 0))
+
+    inner = jax.checkpoint(inner, prevent_cse=False)
+    z0 = jnp.zeros((B, D), jnp.float32)
+    carry0 = (z0, z0, z0, jnp.full((B, D), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(inner, carry0, wx_c)  # (nc,L,B,D)
+    out = jnp.moveaxis(hs, 2, 0).reshape(B, S, D).astype(dt)
+    return lshard(out, "act_batch", "act_seq", None)
+
+
+def init_slstm_state(cfg: XLSTMCfg, d: int, batch: int, dtype):
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"sh": z, "sc": z, "sn": z, "sm": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_decode(params, cfg: XLSTMCfg, x_t, state):
+    dt = x_t.dtype
+    wx = jnp.einsum("bd,df->bf", x_t[:, 0].astype(jnp.float32), params["w_ifzo"])
+    carry = (state["sh"], state["sc"], state["sn"], state["sm"])
+    h, c, n, m = _slstm_cell(params, carry, wx)
+    out = h.astype(dt)[:, None]
+    return lshard(out, "act_batch", "act_seq", None), {"sh": h, "sc": c, "sn": n, "sm": m}

@@ -1,0 +1,230 @@
+"""Model entry points: init / forward / loss / prefill / decode.
+
+All functions are pure; params and decode state are plain pytrees.  The
+vision and audio frontends are stubs — inputs arrive as precomputed patch /
+frame embeddings (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.models import transformer as tfm
+from repro.models.layers import embeddings as emb
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+from repro.parallel.sharding import lshard
+
+MOE_LB_WEIGHT = 0.01
+MOE_Z_WEIGHT = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Init
+
+
+def init_params(key, cfg: ModelCfg) -> Dict:
+    ks = jax.random.split(key, 4 + len(cfg.stages))
+    p: Dict = {}
+    if cfg.frontend == "audio":
+        # stub frontend: project precomputed frame features (feat dim = d/2)
+        p["frontend"] = emb.init_frontend(ks[0], cfg.d_model // 2, cfg.d_model)
+    else:
+        p["embed"] = emb.init_tok_embed(ks[0], cfg.vocab_size, cfg.d_model)
+    if cfg.frontend == "vision":
+        p["frontend"] = emb.init_frontend(ks[1], cfg.d_model // 2, cfg.d_model)
+    p["stages"] = [tfm.init_stage(ks[3 + i], cfg, st) for i, st in enumerate(cfg.stages)]
+    p["final_norm"] = init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings or cfg.frontend == "audio":
+        p["head"] = emb.init_out_head(ks[2], cfg.d_model, cfg.vocab_size)
+    dt = jnp.dtype(cfg.param_dtype)
+    if dt != jnp.float32:
+        p = jax.tree.map(lambda x: x.astype(dt) if x.dtype == jnp.float32 else x, p)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+
+
+def _embed_inputs(params, cfg: ModelCfg, batch):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio":
+        x = emb.apply_frontend(params["frontend"], batch["feats"], dt)
+    else:
+        x = emb.embed_tokens(params["embed"], batch["tokens"], dt)
+    if cfg.abs_pos == "sinusoidal":
+        x = x + emb.sinusoidal_pos(x.shape[1], cfg.d_model, dt)
+    enc = None
+    if cfg.frontend == "vision":
+        enc = emb.apply_frontend(params["frontend"], batch["img_feats"], dt)
+        enc = lshard(enc, "act_batch", None, None)
+    return lshard(x, "act_batch", "act_seq", None), enc
+
+
+def forward(params, cfg: ModelCfg, batch) -> Tuple[jax.Array, Dict]:
+    """-> (logits (B,S,V) vocab-sharded, aux dict)."""
+    x, enc = _embed_inputs(params, cfg, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    aux = dict(tfm.ZERO_AUX)
+    for st, sp in zip(cfg.stages, params["stages"]):
+        x, a = tfm.stage_fwd(sp, cfg, st, x, positions=positions, enc=enc)
+        aux = tfm._add_aux(aux, a)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    tied = params["embed"]["tok_embed"] if (cfg.tie_embeddings and "embed" in params) else None
+    logits = emb.logits_from_hidden(params.get("head", {}), x, tied_embed=tied)
+    return logits, aux
+
+
+def _xent(logits, labels):
+    """CE over vocab-sharded logits without gathering the vocab axis.
+
+    logits: (B,S,V) sharded P(batch, None, 'model'); labels: (B,S) int32.
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    V = logits.shape[-1]
+    hit = jnp.equal(labels[..., None], jax.lax.broadcasted_iota(jnp.int32, lf.shape, 2))
+    tgt = jnp.sum(jnp.where(hit, lf, 0.0), axis=-1)
+    return lse - tgt  # (B,S)
+
+
+def loss_fn(params, cfg: ModelCfg, batch) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, cfg, batch)
+    per_tok = _xent(logits, batch["labels"])
+    if "loss_mask" in batch:
+        mask = batch["loss_mask"].astype(jnp.float32)
+        loss = jnp.sum(per_tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        loss = jnp.mean(per_tok)
+    total = (loss + MOE_LB_WEIGHT * aux["moe_lb_loss"]
+             + MOE_Z_WEIGHT * aux["moe_z_loss"])
+    metrics = {"ce_loss": loss, **aux}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode
+
+
+def init_decode_state(params, cfg: ModelCfg, batch: int, cache_len: int,
+                      enc_feats=None) -> Dict:
+    """Fresh per-layer caches/states for autoregressive decoding."""
+    dt = jnp.dtype(cfg.dtype)
+    enc = None
+    if cfg.frontend == "vision":
+        enc = emb.apply_frontend(params["frontend"], enc_feats, dt)
+    states = [tfm.init_stage_state(sp, cfg, st, batch, cache_len, dt, enc)
+              for st, sp in zip(cfg.stages, params["stages"])]
+    return {"layers": states, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, cfg: ModelCfg, state, tokens_t, *,
+                sp_decode: bool = False) -> Tuple[jax.Array, Dict]:
+    """tokens_t: (B,1) int32 -> (logits (B,1,V), new state)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = emb.embed_tokens(params["embed"], tokens_t, dt)
+    if cfg.abs_pos == "sinusoidal":
+        x = x + emb.sinusoidal_pos(1, cfg.d_model, dt, offset=state["pos"])
+    new_layers = []
+    for st, sp, ss in zip(cfg.stages, params["stages"], state["layers"]):
+        x, ns = tfm.stage_decode(sp, cfg, st, x, ss, sp_decode=sp_decode)
+        new_layers.append(ns)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    tied = params["embed"]["tok_embed"] if cfg.tie_embeddings else None
+    logits = emb.logits_from_hidden(params.get("head", {}), x, tied_embed=tied)
+    return logits, {"layers": new_layers, "pos": state["pos"] + 1}
+
+
+def prefill(params, cfg: ModelCfg, state, tokens, enc_feats=None) -> Dict:
+    """Teacher-forced prompt ingestion: fills every attention cache and rolls
+    recurrent states forward. tokens: (B,S)."""
+    from repro.models.layers import attention as attn_lib
+
+    dt = jnp.dtype(cfg.dtype)
+    x, enc = _embed_inputs(params, cfg, {"tokens": tokens,
+                                         "img_feats": enc_feats})
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    new_layers = []
+    for st, sp, ss in zip(cfg.stages, params["stages"], state["layers"]):
+        x, ns = _stage_prefill(sp, cfg, st, x, ss, positions, enc)
+        new_layers.append(ns)
+    return {"layers": new_layers, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def _stage_prefill(params, cfg, st, x, states, positions, enc):
+    """Runs stage_fwd for hidden states while re-deriving caches layerwise.
+
+    Implemented blockwise (no scan) only for repeats==1 stages; scanned stages
+    prefill inside the scan.
+    """
+    from repro.models.layers import attention as attn_lib
+    from repro.models.layers import mamba as mamba_lib
+    from repro.models.layers import xlstm as xlstm_lib
+
+    def one_block(bp, blk, x, s):
+        h = rmsnorm(bp["mixer_norm"], x, cfg.norm_eps)
+        if blk.mixer == "attn":
+            m = attn_lib.attention_fwd(bp["mixer"], blk.attn, h,
+                                       positions=positions, q_chunk=cfg.attn_q_chunk)
+            s = attn_lib.prefill_cache(bp["mixer"], blk.attn, s, h, positions)
+        elif blk.mixer == "cross_attn":
+            m = attn_lib.attention_fwd(bp["mixer"], blk.attn, h, enc=enc,
+                                       q_chunk=cfg.attn_q_chunk)
+        elif blk.mixer == "mamba":
+            m, s = _roll_recurrent(mamba_lib.mamba_fwd, mamba_lib.mamba_decode,
+                                   bp["mixer"], blk.mamba, h, s)
+        elif blk.mixer == "mlstm":
+            m, s = _roll_recurrent(xlstm_lib.mlstm_fwd, xlstm_lib.mlstm_decode,
+                                   bp["mixer"], blk.xlstm, h, s)
+        else:
+            m, s = _roll_recurrent(xlstm_lib.slstm_fwd, xlstm_lib.slstm_decode,
+                                   bp["mixer"], blk.xlstm, h, s)
+        x = x + m
+        if blk.ffn is not None:
+            h2 = rmsnorm(bp["ffn_norm"], x, cfg.norm_eps)
+            if blk.ffn == "mlp":
+                from repro.models.layers.mlp import mlp_fwd
+                x = x + mlp_fwd(bp["ffn"], blk.mlp, h2)
+            else:
+                from repro.models.layers.moe import moe_fwd
+                f, _ = moe_fwd(bp["ffn"], blk.moe, h2)
+                x = x + f
+        return x, s
+
+    if st.repeats == 1:
+        new_states = []
+        for i, blk in enumerate(st.pattern):
+            x, s = one_block(params[i], blk, x, states[i])
+            new_states.append(s)
+        return x, new_states
+
+    def body(x, xs):
+        gp, gs = xs
+        ns = []
+        for i, blk in enumerate(st.pattern):
+            x, s = one_block(gp[i], blk, x, gs[i])
+            ns.append(s)
+        return x, tuple(ns)
+
+    x, new_states = jax.lax.scan(body, x, (tuple(params), tuple(states)))
+    return x, list(new_states)
+
+
+def _roll_recurrent(fwd, dec, p, c, h, s):
+    """Prefill a recurrent mixer: full-seq output + state from stepping the
+    last position (cheap approximation is wrong — we must step the whole
+    prompt).  We scan the single-step decode over time for the state while
+    using the parallel form for the outputs."""
+    m = fwd(p, c, h)
+
+    def step(s, h_t):
+        _, s = dec(p, c, h_t[:, None, :], s)
+        return s, None
+
+    s, _ = jax.lax.scan(step, s, jnp.moveaxis(h, 1, 0))
+    return m, s

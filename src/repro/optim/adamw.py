@@ -1,0 +1,86 @@
+"""AdamW with optional int8-quantized moment storage (for ≥100B archs).
+
+Plain-pytree optimizer (no optax dependency).  State layout:
+  {"m": tree, "v": tree, "step": scalar}
+where each leaf of m/v is either an fp32 array or {"q": int8, "qscale": f32}.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.quantized_state import dequantize, is_quantized, quantize
+
+
+@dataclass(frozen=True)
+class AdamWCfg:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    state_dtype: str = "float32"  # "float32" | "int8"
+
+
+def _zeros_like_state(p, cfg: AdamWCfg):
+    z = jnp.zeros(p.shape, jnp.float32)
+    if cfg.state_dtype == "int8":
+        return quantize(z)
+    return z
+
+
+def init_opt_state(params, cfg: AdamWCfg):
+    return {
+        "m": jax.tree.map(lambda p: _zeros_like_state(p, cfg), params),
+        "v": jax.tree.map(lambda p: _zeros_like_state(p, cfg), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def apply_updates(params, grads, state, cfg: AdamWCfg, lr):
+    """Returns (new_params, new_state, metrics)."""
+    metrics = {}
+    if cfg.grad_clip is not None:
+        grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+        metrics["grad_norm"] = gn
+    step = state["step"] + 1
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = dequantize(m) if is_quantized(m) else m
+        vf = dequantize(v) if is_quantized(v) else v
+        mf = cfg.b1 * mf + (1 - cfg.b1) * gf
+        vf = cfg.b2 * vf + (1 - cfg.b2) * gf * gf
+        u = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (u + cfg.weight_decay * pf)
+        new_p = pf.astype(p.dtype)
+        new_m = quantize(mf) if is_quantized(m) else mf
+        new_v = quantize(vf) if is_quantized(v) else vf
+        return new_p, new_m, new_v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

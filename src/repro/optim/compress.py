@@ -1,0 +1,101 @@
+"""Error-feedback int8 gradient compression for data-parallel reduction.
+
+``compressed_psum`` replaces the f32 gradient all-reduce on the 'data' axis
+with: rowwise-absmax int8 quantization -> int8 all-gather -> local dequant
+sum.  Wire bytes: ~N/4 × (world)/(ring 2×) vs fp32 all-reduce.  Quantization
+error is carried in an error-feedback residual (``EFState``) added back
+before the next step's compression, which restores convergence (tested in
+tests/test_compress.py).
+
+Composition note (DESIGN.md): this applies to the pure-DP regime (params
+replicated over 'data'); with FSDP the reduction is a reduce-scatter fused
+by GSPMD and compression there is future work — the same trade the original
+DP-compression literature makes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quant(x):
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_local(x, axis_name):
+    """Inside shard_map: int8-compressed mean over ``axis_name``."""
+    q, s = _quant(x)
+    qs = jax.lax.all_gather(q, axis_name)  # (W, ...) int8 — wire = N/4
+    ss = jax.lax.all_gather(s, axis_name)
+    total = jnp.sum(_dequant(qs, ss), axis=0)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    err = x - _dequant(q, s)  # local error feedback
+    return total / n, err
+
+
+class EFState(NamedTuple):
+    residual: jax.Array
+
+
+def ef_init(x):
+    return EFState(jnp.zeros_like(x, dtype=jnp.float32))
+
+
+def ef_compressed_mean(x, ef: EFState, axis_name):
+    """Error-feedback compressed mean: compress (x + residual), keep the
+    quantization error as the next residual."""
+    xc = x.astype(jnp.float32) + ef.residual
+    mean, err = compressed_psum_local(xc, axis_name)
+    return mean.astype(x.dtype), EFState(err)
+
+
+def ef_init_tree(params, world: int):
+    """Per-shard residuals: leading axis = DP world size, sharded over it."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((world,) + p.shape, jnp.float32), params)
+
+
+def make_ddp_value_and_grad(loss_fn, mesh, axis: str = "data"):
+    """DDP gradient step with int8 error-feedback compressed reduction.
+
+    Returns ``fn(params, ef, batch) -> (loss, grads, new_ef)`` where params
+    are replicated, batch is sharded over ``axis``, and ef leaves carry a
+    leading world-size dim sharded over ``axis`` (per-shard residuals).
+    """
+    def fn(params, ef, batch):
+        leaves, treedef = jax.tree.flatten(params)
+        n = len(leaves)
+
+        def local(params, batch, *ef_leaves):
+            loss, g = jax.value_and_grad(loss_fn)(params, batch)
+            g_leaves = treedef.flatten_up_to(g)
+            means, news = [], []
+            for gl, el in zip(g_leaves, ef_leaves):
+                m, ne = ef_compressed_mean(gl, EFState(el[0]), axis)
+                means.append(m)
+                news.append(ne.residual[None])
+            loss = jax.lax.pmean(loss, axis)
+            return (loss, *means, *news)
+
+        out = jax.shard_map(
+            local, mesh=mesh,
+            in_specs=(P(), P(axis)) + (P(axis),) * n,
+            out_specs=(P(),) + (P(),) * n + (P(axis),) * n,
+            check_vma=False,
+        )(params, batch, *treedef.flatten_up_to(ef))
+        loss = out[0]
+        grads = treedef.unflatten(list(out[1 : 1 + n]))
+        new_ef = treedef.unflatten(list(out[1 + n :]))
+        return loss, grads, new_ef
+
+    return fn

@@ -1,0 +1,9 @@
+from repro.parallel.sharding import (  # noqa: F401
+    axis_rules,
+    lshard,
+    logical_spec,
+    make_rules,
+    param_specs,
+    use_mesh,
+    current_mesh,
+)

@@ -1,0 +1,1 @@
+from repro.serve.serve_step import make_serve_step, decode_state_specs  # noqa: F401

@@ -1,0 +1,72 @@
+"""Distributed flash-decode: single-token attention over a sharded KV cache.
+
+The KV cache's *sequence* dim is sharded (normal decode: over 'model';
+long-context batch=1: over ('data','model')).  Each shard produces the
+partial online-softmax terms (local max, local sum, local weighted values);
+a pmax + two psums over the sequence axes combine them.  The communicated
+payload per layer is O(B·kvH·G·hd) — independent of context length — which
+is what makes 32k–512k contexts serveable at all (an all-gathered KV would
+be GBs per layer per step).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import current_mesh, current_rules
+
+NEG_INF = -1e30
+
+
+def _partial_terms(q, k, v, k_pos, pos, window):
+    """q: (B,1,kvH,G,hd); k,v: (B,T,kvH,hd); k_pos: (T,).
+    Returns (m (B,kvH,G), l (B,kvH,G), o (B,kvH,G,hd))."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqkgd,btkd->bkgt", q, k).astype(jnp.float32) * scale
+    ok = (k_pos >= 0) & (k_pos <= pos)
+    if window is not None:
+        ok &= (pos - k_pos) < window
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(ok[None, None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p.astype(v.dtype), v).astype(jnp.float32)
+    return m, l, o
+
+
+def sp_flash_decode(q, k, v, k_pos, pos, window: Optional[int] = None):
+    """Returns (B, 1, kvH, G, hd).  Falls back to the local computation when
+    no mesh / no KV-seq sharding is active (unit tests, single host)."""
+    mesh = current_mesh()
+    rules = current_rules()
+    seq_ax = rules.get("act_kv_seq")
+    if mesh is None or not seq_ax:
+        m, l, o = _partial_terms(q, k, v, k_pos, pos, window)
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return out[:, None].astype(q.dtype)  # (B,1,kvH,G,hd)
+
+    seq_ax = (seq_ax,) if isinstance(seq_ax, str) else tuple(seq_ax)
+    batch_ax = rules.get("act_kv_batch") or ()
+    batch_ax = (batch_ax,) if isinstance(batch_ax, str) else tuple(batch_ax)
+    bspec = batch_ax if batch_ax else None
+
+    def local_fn(q, k, v, k_pos, pos):
+        m, l, o = _partial_terms(q, k, v, k_pos, pos, window)
+        m_g = jax.lax.pmax(m, seq_ax)
+        corr = jnp.exp(m - m_g)
+        l = jax.lax.psum(l * corr, seq_ax)
+        o = jax.lax.psum(o * corr[..., None], seq_ax)
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype).reshape(q.shape)
+
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(bspec), P(bspec, seq_ax), P(bspec, seq_ax), P(seq_ax), P()),
+        out_specs=P(bspec),
+        check_vma=False,
+    )(q, k, v, k_pos, pos)

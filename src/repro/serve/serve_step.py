@@ -1,0 +1,72 @@
+"""The jit-compiled serving step (one decode token) + state sharding rules."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelCfg
+from repro.models import model as M
+from repro.parallel.sharding import logical_spec
+
+
+def make_serve_step(cfg: ModelCfg, *, sp_decode: bool = False):
+    def serve_step(params, state, tokens_t):
+        return M.decode_step(params, cfg, state, tokens_t, sp_decode=sp_decode)
+
+    return serve_step
+
+
+# leaf name -> logical axes for decode-state leaves (unstacked; a scanned
+# stage adds a leading "layer" dim)
+STATE_AXES: Dict[str, tuple] = {
+    # attention KV cache
+    "k": ("act_kv_batch", "act_kv_seq", "act_kv_heads", None),
+    "v": ("act_kv_batch", "act_kv_seq", "act_kv_heads", None),
+    "k_pos": ("act_kv_seq",),
+    "pos": (),
+    # mamba
+    "h": ("act_kv_batch", "tensor", None),
+    "conv": ("act_kv_batch", None, "tensor"),
+    # mlstm (matrix memory replicated over 'model'; it is small)
+    "C": ("act_kv_batch", None, None, None),
+    "n": ("act_kv_batch", None, None),
+    "m": ("act_kv_batch", None),
+    # slstm
+    "sh": ("act_kv_batch", None),
+    "sc": ("act_kv_batch", None),
+    "sn": ("act_kv_batch", None),
+    "sm": ("act_kv_batch", None),
+}
+
+
+def _state_leaf_spec(path, leaf, rules, mesh=None):
+    name = None
+    for p in reversed(path):
+        if isinstance(p, jax.tree_util.DictKey):
+            name = p.key
+            break
+    if name not in STATE_AXES:
+        raise ValueError(f"no sharding rule for decode-state leaf {path}")
+    axes = STATE_AXES[name]
+    if len(leaf.shape) == len(axes) + 1:
+        axes = ("layer",) + axes
+    elif len(leaf.shape) != len(axes):
+        raise ValueError(f"state leaf {name}: ndim {len(leaf.shape)} vs rule {len(axes)}")
+    spec = logical_spec(axes, rules)
+    if mesh is not None:
+        from repro.parallel.sharding import sanitize_spec
+
+        spec = sanitize_spec(spec, leaf.shape, mesh)
+    return spec
+
+
+def decode_state_specs(state_shapes, rules=None):
+    """PartitionSpec tree for an init_decode_state() pytree."""
+    from repro.parallel.sharding import current_mesh, current_rules
+
+    rules = rules if rules is not None else current_rules()
+    mesh = current_mesh()
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _state_leaf_spec(path, leaf, rules, mesh), state_shapes)

@@ -1,0 +1,50 @@
+"""Elastic rescale: move a training state onto a different mesh.
+
+On a node failure the launcher picks the largest healthy factorization
+(``rescale_plan``), and the checkpoint (stored in logical layout —
+train/checkpoint.py) restores onto the new mesh.  ``reshard_state`` handles
+the live-state path (same process, e.g. shrinking within a reservation).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import make_rules, use_mesh
+from repro.train.train_step import train_state_specs
+
+
+def rescale_plan(n_healthy: int, prefer_model: int = 16) -> Tuple[int, int]:
+    """Largest (data, model) mesh ≤ n_healthy, keeping TP width if we can.
+
+    Preference order keeps the TP width, but never at the cost of idling
+    >10% of the healthy nodes (a 3-node remainder should run 3×1, not 1×2).
+    """
+    candidates = []
+    for model in (prefer_model, prefer_model // 2, prefer_model * 2,
+                  8, 4, 2, 1):
+        if model and model <= n_healthy:
+            data = n_healthy // model
+            used = data * model
+            if used >= 0.9 * n_healthy:
+                return (data, model)
+            candidates.append((used, data, model))
+    used, data, model = max(candidates)
+    return (data, model)
+
+
+def reshard_state(state, new_mesh: Mesh, rules=None):
+    """Re-place every leaf of a train state onto ``new_mesh``."""
+    rules = rules or make_rules(new_mesh)
+    with use_mesh(new_mesh, rules):
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        specs = train_state_specs(shapes, rules)
+
+    def place(x, spec):
+        return jax.device_put(jax.device_get(x), NamedSharding(new_mesh, spec))
+
+    return jax.tree.map(place, state, specs,
+                        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, P))

@@ -1,0 +1,105 @@
+"""The training loop: jit'd step + checkpoint/resume + failure handling.
+
+Fault-tolerance contract (exercised by tests/test_fault_tolerance.py):
+  - checkpoints every ``save_every`` steps (async host snapshot + atomic dir)
+  - on restart, resumes from the latest checkpoint and the data pipeline
+    skips to exactly the next unseen batch (deterministic ``batch_at``)
+  - a transient step failure (``FailureInjector`` in tests; an XLA error or
+    preempted host in production) triggers restore-from-last-checkpoint and
+    replay, bounded by ``max_retries``
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelCfg, ShapeCfg
+from repro.data.pipeline import SyntheticLMData
+from repro.models import model as M  # noqa: F401  (re-export convenience)
+from repro.optim.adamw import AdamWCfg
+from repro.optim.schedules import warmup_cosine
+from repro.train import checkpoint as ckpt_lib
+from repro.train.train_step import init_train_state, make_train_step
+
+
+class TrainLoop:
+    def __init__(self, cfg: ModelCfg, shape: ShapeCfg, *,
+                 opt_cfg: Optional[AdamWCfg] = None,
+                 lr: float = 3e-4, total_steps: int = 1000,
+                 microbatches: int = 1,
+                 ckpt_dir: Optional[str] = None, save_every: int = 50,
+                 seed: int = 0, batch_override: Optional[int] = None,
+                 failure_hook: Optional[Callable[[int], None]] = None,
+                 max_retries: int = 3):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg or AdamWCfg()
+        self.lr_fn = warmup_cosine(lr, max(1, total_steps // 20), total_steps)
+        self.step_fn = jax.jit(
+            make_train_step(cfg, self.opt_cfg, self.lr_fn, microbatches),
+            donate_argnums=(0,))
+        self.data = SyntheticLMData(cfg, shape, seed, batch_override)
+        self.ckpt_dir = Path(ckpt_dir) if ckpt_dir else None
+        self.save_every = save_every
+        self.failure_hook = failure_hook
+        self.max_retries = max_retries
+        self.seed = seed
+
+    # -- state ------------------------------------------------------------
+    def init_or_restore(self):
+        start = 0
+        if self.ckpt_dir is not None:
+            latest = ckpt_lib.latest_step(self.ckpt_dir)
+            if latest is not None:
+                like = jax.eval_shape(lambda: init_train_state(
+                    jax.random.PRNGKey(self.seed), self.cfg, self.opt_cfg))
+                state = ckpt_lib.restore_checkpoint(self.ckpt_dir, like,
+                                                    step=latest)
+                return state, latest
+        state = init_train_state(jax.random.PRNGKey(self.seed), self.cfg,
+                                 self.opt_cfg)
+        return state, start
+
+    # -- run --------------------------------------------------------------
+    def run(self, num_steps: int) -> List[Dict[str, float]]:
+        state, step = self.init_or_restore()
+        history: List[Dict[str, float]] = []
+        retries = 0
+        writer = None
+        while step < num_steps:
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.data.batch_at(step).items()}
+            try:
+                if self.failure_hook is not None:
+                    self.failure_hook(step)  # may raise (test injection)
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batch)
+                loss = float(metrics["loss"])
+                history.append({"step": step, "loss": loss,
+                                "time_s": time.perf_counter() - t0})
+                if np.isnan(loss):
+                    raise FloatingPointError(f"NaN loss at step {step}")
+                retries = 0
+                step += 1
+            except FloatingPointError:
+                raise
+            except Exception:
+                retries += 1
+                if retries > self.max_retries or self.ckpt_dir is None:
+                    raise
+                state, step = self.init_or_restore()  # restore + replay
+                continue
+            if (self.ckpt_dir is not None and step % self.save_every == 0):
+                if writer is not None:
+                    writer.join()
+                writer = ckpt_lib.save_checkpoint(self.ckpt_dir, state, step,
+                                                  background=True)
+        if writer is not None:
+            writer.join()
+        if self.ckpt_dir is not None:
+            ckpt_lib.save_checkpoint(self.ckpt_dir, state, step)
+        self.final_state = state
+        return history

@@ -1,0 +1,105 @@
+"""The jit-compiled training step: loss -> grads -> AdamW update.
+
+State is a plain pytree {"params": ..., "opt": {m, v, step}} so checkpointing
+and elastic resharding treat it uniformly.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelCfg
+from repro.models import model as M
+from repro.optim.adamw import AdamWCfg, apply_updates, init_opt_state
+from repro.optim.quantized_state import is_quantized
+from repro.parallel.sharding import constrain_like_params, logical_spec, param_specs
+
+
+def init_train_state(key, cfg: ModelCfg, opt_cfg: AdamWCfg):
+    params = M.init_params(key, cfg)
+    return {"params": params, "opt": init_opt_state(params, opt_cfg)}
+
+
+def make_train_step(cfg: ModelCfg, opt_cfg: AdamWCfg, lr_fn: Callable,
+                    microbatches: int = 1):
+    def train_step(state, batch):
+        params = state["params"]
+
+        def lfn(p, b):
+            return M.loss_fn(p, cfg, b)
+
+        if microbatches == 1:
+            (loss, mets), grads = jax.value_and_grad(lfn, has_aux=True)(params, batch)
+            grads = constrain_like_params(grads)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                (l, m), g = jax.value_and_grad(lfn, has_aux=True)(params, mb)
+                g = constrain_like_params(g)
+                acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(a.dtype) / microbatches, acc, g)
+                return acc, (l, m)
+
+            # accumulate in the parameter dtype: f32 for ≤50B archs, bf16 for
+            # the ≥398B ones (an f32 accumulator alone is 6.2 GiB/dev there)
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            grads, (ls, ms) = jax.lax.scan(body, acc0, mbs)
+            loss = jnp.mean(ls)
+            mets = jax.tree.map(lambda x: jnp.mean(x), ms)
+
+        lr = lr_fn(state["opt"]["step"])
+        new_params, new_opt, om = apply_updates(params, grads, state["opt"],
+                                                opt_cfg, lr)
+        metrics = {"loss": loss, "lr": lr, **mets, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs for the train state
+
+
+def train_state_specs(state_shapes, rules=None):
+    """PartitionSpec tree mirroring a {"params","opt"} state pytree.
+
+    Moment leaves mirror the param spec; int8-quantized leaves carry a
+    rowwise scale whose (size-1) last axis is unsharded.
+    """
+    pspecs = param_specs(state_shapes["params"], rules=rules)
+
+    def moment_spec(ps, leaf):
+        if is_quantized(leaf) or (isinstance(leaf, dict) and "q" in leaf):
+            axes = tuple(ps)
+            scale_axes = axes[:-1] + (None,) if axes else ()
+            return {"q": ps, "qscale": P(*scale_axes)}
+        return ps
+
+    # walk m/v against param specs
+    flat_ps, treedef = jax.tree.flatten(pspecs, is_leaf=lambda x: isinstance(x, P))
+    flat_m = treedef.flatten_up_to(state_shapes["opt"]["m"])
+    flat_v = treedef.flatten_up_to(state_shapes["opt"]["v"])
+    m_specs = treedef.unflatten([moment_spec(p, l) for p, l in zip(flat_ps, flat_m)])
+    v_specs = treedef.unflatten([moment_spec(p, l) for p, l in zip(flat_ps, flat_v)])
+    return {"params": pspecs,
+            "opt": {"m": m_specs, "v": v_specs, "step": P()}}
+
+
+def batch_specs(batch_shapes):
+    """Inputs: leading dim is global batch -> sharded over all data axes."""
+    from repro.parallel.sharding import current_mesh, sanitize_spec
+
+    mesh = current_mesh()
+
+    def spec(x):
+        if x.ndim == 0:
+            return P()
+        s = logical_spec(("act_batch",) + (None,) * (x.ndim - 1))
+        return sanitize_spec(s, x.shape, mesh) if mesh is not None else s
+    return jax.tree.map(spec, batch_shapes)

@@ -1,0 +1,35 @@
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = str(REPO / "src")
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run a snippet in a subprocess with N fake devices.
+
+    Multi-device tests must not set xla_force_host_platform_device_count in
+    this process (smoke tests and benches must see 1 device), so each
+    sharded test runs in its own interpreter.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multidevice subprocess failed:\nSTDOUT:\n{proc.stdout}\n"
+            f"STDERR:\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def multidevice():
+    return run_multidevice

@@ -1,0 +1,24 @@
+"""Autotuner: candidate evaluation plumbing (multidevice subprocess — the
+full-size lowering needs fake devices)."""
+
+
+def test_autotune_ranks_candidates(multidevice):
+    multidevice("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.core.autotune import Candidate, select_defaults
+from repro.launch.mesh import make_mesh
+
+# a small mesh keeps this quick; the production flow uses 16x16
+mesh = make_mesh((4, 2), ("data", "model"))
+out = select_defaults(
+    "xlstm-350m", "decode_32k", mesh,
+    candidates=(Candidate("baseline", {}),
+                Candidate("bf16-params", {"param_dtype": "bfloat16"})))
+assert "best" in out and "candidate" in out["best"], out
+names = {r.get("candidate") for r in out["table"]}
+assert names == {"baseline", "bf16-params"}
+assert all("error" not in r for r in out["table"]), out["table"]
+print("OK", out["best"]["candidate"], out["best"]["dominant"])
+""", n_devices=8, timeout=600)

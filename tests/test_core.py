@@ -1,0 +1,145 @@
+"""Core paper-technique modules: affinity, memory modes, sweep, roofline,
+HLO cost walker, memory model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import affinity, memory_modes
+from repro.core.hlo_cost import analyze
+from repro.core.roofline import V5E, roofline_terms
+from repro.core.sweep import SweepCell, factorizations, score
+from repro.core.memory_model import estimate
+from repro.configs import SHAPES_BY_NAME, get_config
+
+
+# ---------------------------------------------------------------------------
+# affinity (taskset-pinning analogue)
+
+
+def test_pinned_model_rings_are_single_hop():
+    p = affinity.pinned_placement()
+    assert p.axis_ring_cost["model"] == pytest.approx(1.0)
+
+
+def test_naive_placement_is_worse():
+    p = affinity.pinned_placement()
+    n = affinity.naive_placement()
+    assert n.axis_ring_cost["model"] > 2 * p.axis_ring_cost["model"]
+    rows = affinity.placement_table()
+    assert {r["placement"] for r in rows} == {"pinned", "naive"}
+
+
+def test_torus_hop_symmetry():
+    c = affinity.torus_coords()
+    assert affinity.hop_distance(c[0], c[15]) == 1  # wrap-around column
+    assert affinity.hop_distance(c[0], c[8 * 16 + 8]) == 16  # antipode
+
+
+# ---------------------------------------------------------------------------
+# memory modes (MCDRAM analogue)
+
+
+def test_memory_modes_vmem_budget():
+    for m in memory_modes.tiling_grid():
+        assert m.vmem_bytes() <= 100 * 2**20
+    assert memory_modes.MODES["cache"].remat == "dots"
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    assert memory_modes.apply(cfg, memory_modes.HYBRID).remat == "full"
+
+
+# ---------------------------------------------------------------------------
+# sweep protocol
+
+
+def test_factorizations_cover_paper_range():
+    f = factorizations(256)
+    assert (1, 256) in f and (256, 1) in f and (16, 16) in f
+    assert all(p * t == 256 for p, t in f)
+
+
+def test_constant_memory_protocol():
+    """N = N0/√Nproc keeps total bytes ~constant (paper's 55 GB protocol)."""
+    base = SweepCell(1, 256).n ** 2 * 1
+    for nproc in (4, 16, 64, 256):
+        cell = SweepCell(nproc, 256 // nproc)
+        total = nproc * cell.n ** 2
+        assert abs(total - base) / base < 0.1, (nproc, total, base)
+
+
+def test_score_identifies_dominant_term():
+    row = {"flops_per_device": 197e12, "bytes_per_device": 1e9,
+           "collective_bytes_per_device": 0.0, "model_flops": 197e12,
+           "n_devices": 1, "peak_bytes": 0}
+    s = score(row)
+    assert s["dominant"] == "compute"
+    assert s["peak_fraction"] == pytest.approx(1.0, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# HLO cost walker
+
+
+def test_walker_counts_loop_trips():
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ jnp.ones((32, 32))), None
+        c, _ = jax.lax.scan(body, x, None, length=11)
+        return c.sum()
+
+    compiled = jax.jit(f).lower(jax.ShapeDtypeStruct((4, 32), jnp.float32)).compile()
+    r = analyze(compiled.as_text())
+    assert r["flops"] == pytest.approx(11 * 2 * 4 * 32 * 32, rel=0.01)
+
+
+def test_walker_nested_scans():
+    def g(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ jnp.eye(16), None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        c, _ = jax.lax.scan(outer, x, None, length=3)
+        return c.sum()
+
+    compiled = jax.jit(g).lower(jax.ShapeDtypeStruct((2, 16), jnp.float32)).compile()
+    r = analyze(compiled.as_text())
+    assert r["flops"] == pytest.approx(15 * 2 * 2 * 16 * 16, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# roofline + memory model
+
+
+def test_roofline_terms_math():
+    res = {"arch": "qwen2-1.5b", "shape": "train_4k", "mesh": "16x16",
+           "n_devices": 256, "flops_per_device": 197e12,
+           "bytes_per_device": 819e9, "collective_bytes_per_device": 50e9}
+    t = roofline_terms(res)
+    assert t["compute_s"] == pytest.approx(1.0)
+    # memory term is the ANALYTIC traffic model (cfg-derived, not the row's
+    # HLO proxy — that one is reported separately)
+    assert t["memory_s_hlo_proxy"] == pytest.approx(1.0)
+    assert t["memory_s"] > 0
+    assert t["collective_s"] == pytest.approx(1.0)
+    assert 0 < t["useful_flop_ratio"] < 1
+
+
+def test_memory_model_scaling():
+    cfg = get_config("arctic-480b")
+    mesh = {"data": 16, "model": 16}
+    train = estimate(cfg, SHAPES_BY_NAME["train_4k"], mesh, microbatches=8)
+    assert train["params"] == pytest.approx(480e9 * 2 / 256, rel=0.15)
+    assert train["total"] < 16 * 2**30  # fits v5e with microbatching
+    dec = estimate(cfg, SHAPES_BY_NAME["decode_32k"], mesh)
+    # KV: 2*2B*35L*128B*32k*8kv*128hd / 256 devices
+    expect_kv = 2 * 2 * 35 * 128 * 32768 * 8 * 128 / 256
+    assert dec["kv_cache"] == pytest.approx(expect_kv, rel=0.01)
+
+
+def test_multipod_halves_per_device():
+    cfg = get_config("glm4-9b")
+    one = estimate(cfg, SHAPES_BY_NAME["train_4k"], {"data": 16, "model": 16})
+    two = estimate(cfg, SHAPES_BY_NAME["train_4k"],
+                   {"pod": 2, "data": 16, "model": 16})
+    assert two["params"] == pytest.approx(one["params"] / 2, rel=1e-6)

@@ -1,0 +1,68 @@
+"""Data pipeline: determinism, skip-ahead, learnability, prefetch."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeCfg
+from repro.data.pipeline import SyntheticLMData
+
+TINY = ShapeCfg("tiny", 64, 4, "train")
+
+
+def test_batch_at_deterministic():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    d1 = SyntheticLMData(cfg, TINY, seed=3)
+    d2 = SyntheticLMData(cfg, TINY, seed=3)
+    for s in (0, 7, 123):
+        a, b = d1.batch_at(s), d2.batch_at(s)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_different_steps_different_batches():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    d = SyntheticLMData(cfg, TINY)
+    assert not np.array_equal(d.batch_at(0)["tokens"], d.batch_at(1)["tokens"])
+
+
+def test_labels_are_next_tokens():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    d = SyntheticLMData(cfg, TINY)
+    b = d.batch_at(0)
+    # the stream is mostly-deterministic: label[t] should usually equal
+    # (token[t] + drift) mod V -> check shift consistency instead
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_learnable_structure():
+    """>=90% of transitions follow the per-row drift rule (5% noise)."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    d = SyntheticLMData(cfg, TINY)
+    b = d.batch_at(11)
+    t, l = b["tokens"], b["labels"]
+    V = cfg.vocab_size
+    drift = (l[:, :1] - t[:, :1]) % V
+    frac = np.mean((t + drift) % V == l)
+    assert frac > 0.85
+
+
+def test_prefetch_iterator_matches_batch_at():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    d = SyntheticLMData(cfg, TINY)
+    it = d.iter_from(5)
+    first = next(it)
+    np.testing.assert_array_equal(np.asarray(first["tokens"]),
+                                  d.batch_at(5)["tokens"])
+    second = next(it)
+    np.testing.assert_array_equal(np.asarray(second["tokens"]),
+                                  d.batch_at(6)["tokens"])
+
+
+def test_audio_and_vision_batches():
+    for arch in ("hubert-xlarge", "llama-3.2-vision-11b"):
+        cfg = get_config(arch, smoke=True)
+        d = SyntheticLMData(cfg, TINY)
+        b = d.batch_at(0)
+        if cfg.frontend == "audio":
+            assert b["feats"].shape == (4, 64, cfg.d_model // 2)
+        else:
+            assert b["img_feats"].shape == (4, cfg.n_img_tokens, cfg.d_model // 2)

@@ -1,0 +1,123 @@
+"""Per-kernel allclose vs the pure-jnp oracles, over shape/dtype sweeps,
+plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+
+
+@pytest.mark.parametrize("shape", [(64, 64, 64), (128, 96, 32), (100, 130, 70),
+                                   (256, 512, 128), (32, 1024, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("accum", ["vmem", "hbm"])
+def test_matmul_allclose(shape, dtype, accum):
+    M, K, N = shape
+    a = jax.random.normal(KEY, (M, K), dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N), dtype)
+    got = ops.matmul(a, b, block=(32, 64, 32), accum=accum)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("block", [(16, 16, 16), (32, 64, 32), (128, 128, 128)])
+def test_matmul_block_invariance(block):
+    a = jax.random.normal(KEY, (96, 160), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (160, 64), jnp.float32)
+    got = ops.matmul(a, b, block=block)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(8, 64), k=st.integers(8, 96), n=st.integers(8, 48))
+def test_matmul_linearity(m, k, n):
+    """Property: matmul(a, b1 + b2) == matmul(a, b1) + matmul(a, b2)."""
+    a = jax.random.normal(KEY, (m, k), jnp.float32)
+    b1 = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    b2 = jax.random.normal(jax.random.PRNGKey(2), (k, n), jnp.float32)
+    lhs = ops.matmul(a, b1 + b2, block=(16, 16, 16))
+    rhs = ops.matmul(a, b1, block=(16, 16, 16)) + ops.matmul(a, b2, block=(16, 16, 16))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+
+
+@pytest.mark.parametrize("S,hd,G,kvH", [(64, 16, 1, 2), (64, 32, 4, 2),
+                                        (128, 16, 2, 3)])
+@pytest.mark.parametrize("window", [None, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_allclose(S, hd, G, kvH, window, dtype):
+    B = 2
+    q = jax.random.normal(KEY, (B * kvH * G, S, hd), dtype)
+    k = jax.random.normal(jax.random.PRNGKey(2), (B * kvH, S, hd), dtype)
+    v = jax.random.normal(jax.random.PRNGKey(3), (B * kvH, S, hd), dtype)
+    got = ops.flash_attention(q, k, v, bq=32, bk=32, window=window)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_block_invariance():
+    q = jax.random.normal(KEY, (4, 128, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 16), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 128, 16), jnp.float32)
+    o1 = ops.flash_attention(q, k, v, bq=16, bk=64)
+    o2 = ops.flash_attention(q, k, v, bq=128, bk=16)
+    np.testing.assert_allclose(o1, o2, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(sq=st.sampled_from([32, 64]), hd=st.sampled_from([8, 16]),
+       g=st.integers(1, 3))
+def test_flash_causality(sq, hd, g):
+    """Property: output at position t is unaffected by future K/V."""
+    q = jax.random.normal(KEY, (g, sq, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, sq, hd), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, sq, hd), jnp.float32)
+    o1 = ops.flash_attention(q, k, v, bq=16, bk=16)
+    t = sq // 2
+    k2 = k.at[:, t + 1:].set(99.0)
+    v2 = v.at[:, t + 1:].set(-99.0)
+    o2 = ops.flash_attention(q, k2, v2, bq=16, bk=16)
+    np.testing.assert_allclose(o1[:, : t + 1], o2[:, : t + 1],
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+
+
+@pytest.mark.parametrize("shape", [(4, 37, 96), (1, 128), (3, 5, 7, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_allclose(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],), jnp.float32)
+    got = ops.rmsnorm(x, s)
+    want = ref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(0.1, 100.0), rows=st.integers(1, 8))
+def test_rmsnorm_scale_invariance(scale, rows):
+    """Property: rmsnorm(αx) == rmsnorm(x) for α > 0."""
+    x = jax.random.normal(KEY, (rows, 64), jnp.float32)
+    s = jnp.ones((64,))
+    np.testing.assert_allclose(ops.rmsnorm(x * scale, s), ops.rmsnorm(x, s),
+                               rtol=1e-3, atol=1e-4)

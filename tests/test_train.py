@@ -1,0 +1,147 @@
+"""Training substrate: optimizer math, checkpoint/resume, fault tolerance."""
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import ShapeCfg
+from repro.optim.adamw import AdamWCfg, apply_updates, init_opt_state
+from repro.optim.quantized_state import dequantize, quantize
+from repro.optim.schedules import warmup_cosine
+from repro.train import checkpoint as C
+from repro.train.loop import TrainLoop
+
+KEY = jax.random.PRNGKey(0)
+TINY = ShapeCfg("tiny", 32, 8, "train")
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+
+
+def test_adamw_matches_reference_math():
+    cfg = AdamWCfg(b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0, grad_clip=None)
+    p = {"w": jnp.array([1.0, -2.0, 3.0])}
+    g = {"w": jnp.array([0.1, 0.2, -0.3])}
+    st_ = init_opt_state(p, cfg)
+    new_p, st_, _ = apply_updates(p, g, st_, cfg, lr=0.1)
+    m = 0.1 * np.array([0.1, 0.2, -0.3])
+    v = 0.01 * np.array([0.1, 0.2, -0.3]) ** 2
+    u = (m / 0.1) / (np.sqrt(v / 0.01) + 1e-8)
+    np.testing.assert_allclose(new_p["w"], np.array([1., -2., 3.]) - 0.1 * u,
+                               rtol=1e-5)
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWCfg(grad_clip=1.0)
+    p = {"w": jnp.zeros((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    st_ = init_opt_state(p, cfg)
+    _, _, metrics = apply_updates(p, g, st_, cfg, lr=0.1)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0, rel=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(scale=st.floats(1e-4, 1e3))
+def test_int8_quant_roundtrip_bound(scale):
+    """Property: |x - dq(q(x))| <= rowwise absmax / 127 / 2 + ulp."""
+    x = jax.random.normal(KEY, (8, 64), jnp.float32) * scale
+    err = jnp.abs(x - dequantize(quantize(x)))
+    bound = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0 * 0.5001 + 1e-9
+    assert bool(jnp.all(err <= bound))
+
+
+def test_int8_state_training_tracks_fp32():
+    """int8-moment AdamW stays close to fp32 AdamW on a quadratic."""
+    def loss(w):
+        return jnp.sum((w - 3.0) ** 2)
+
+    runs = {}
+    for sdt in ("float32", "int8"):
+        cfg = AdamWCfg(state_dtype=sdt, weight_decay=0.0, grad_clip=None)
+        w = {"w": jnp.zeros((16,))}
+        st_ = init_opt_state(w, cfg)
+        for _ in range(100):
+            g = jax.grad(lambda p: loss(p["w"]))(w)
+            w, st_, _ = apply_updates(w, g, st_, cfg, lr=0.05)
+        runs[sdt] = w["w"]
+    assert float(jnp.max(jnp.abs(runs["int8"] - runs["float32"]))) < 0.15
+
+
+def test_warmup_cosine_shape():
+    lr = warmup_cosine(1.0, 10, 100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(lr(100)) == pytest.approx(0.1, rel=1e-2)
+    assert float(lr(55)) < float(lr(20))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / loop / fault tolerance
+
+
+def test_checkpoint_roundtrip_exact():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    loop = TrainLoop(cfg, TINY, total_steps=10)
+    state, _ = loop.init_or_restore()
+    d = tempfile.mkdtemp()
+    try:
+        C.save_checkpoint(d, state, 7)
+        assert C.latest_step(d) == 7
+        like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        restored = C.restore_checkpoint(d, like)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    finally:
+        shutil.rmtree(d)
+
+
+def test_resume_is_bit_deterministic():
+    """12 straight steps == 6 steps + restart + 6 steps (same data, state)."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    d1, d2 = tempfile.mkdtemp(), tempfile.mkdtemp()
+    try:
+        h_straight = TrainLoop(cfg, TINY, ckpt_dir=d1, save_every=100,
+                               total_steps=50, lr=1e-3).run(12)
+        TrainLoop(cfg, TINY, ckpt_dir=d2, save_every=6, total_steps=50,
+                  lr=1e-3).run(6)
+        h_resumed = TrainLoop(cfg, TINY, ckpt_dir=d2, save_every=6,
+                              total_steps=50, lr=1e-3).run(12)
+        a = [r["loss"] for r in h_straight[6:]]
+        b = [r["loss"] for r in h_resumed]
+        np.testing.assert_allclose(a, b, rtol=1e-5)
+    finally:
+        shutil.rmtree(d1)
+        shutil.rmtree(d2)
+
+
+def test_failure_recovery():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    d = tempfile.mkdtemp()
+    calls = {"n": 0}
+
+    def chaos(step):
+        if step in (7, 9) and calls["n"] < 2:
+            calls["n"] += 1
+            raise RuntimeError("injected failure")
+
+    try:
+        h = TrainLoop(cfg, TINY, ckpt_dir=d, save_every=5, total_steps=50,
+                      lr=1e-3, failure_hook=chaos).run(12)
+        assert h[-1]["step"] == 11
+        assert calls["n"] == 2
+    finally:
+        shutil.rmtree(d)
+
+
+def test_loss_decreases_on_learnable_data():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    h = TrainLoop(cfg, TINY, total_steps=60, lr=3e-3).run(45)
+    first = np.mean([r["loss"] for r in h[:5]])
+    last = np.mean([r["loss"] for r in h[-5:]])
+    assert last < 0.8 * first, (first, last)
