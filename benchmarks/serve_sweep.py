@@ -1,0 +1,110 @@
+"""Serving-engine sweep — the Figs. 4/5 protocol at serving time.
+
+The paper sweeps (Nproc × Nthread) at constant memory and shows that one
+set of system settings keeps every factorization near peak.  The serving
+analogue sweeps (concurrent users × prompt-length mix × page size) through
+``serve.ServeEngine`` (paged KV + chunked batched prefill) and scores
+measured tokens/s three ways:
+
+- against the seed engine (``serve.reference.ReferenceEngine``, batch-1
+  sequential prefill) on identical traffic — the speedup column;
+- against the analytic decode roofline (``core.roofline.decode_bound``)
+  at the same batch/context — the fraction-of-bound column;
+- across page sizes — paging's constant-traffic claim (the all2all-cache
+  analogue: per-slot KV traffic rounds to pages, so smaller pages hug the
+  true context length).
+
+  PYTHONPATH=src python benchmarks/serve_sweep.py [--arch qwen2-1.5b]
+      [--users 4 16] [--page-sizes 8 32] [--max-tokens 8] [--no-baseline]
+
+CSV: name,tokens_per_s,derived  (derived = ×-over-seed or %-of-bound)
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.roofline import decode_bound
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+from repro.serve.reference import ReferenceEngine
+
+# mixed-length mix: short chat turns + a few long-context stragglers
+# (fractions of cache budget available for the prompt)
+MIX = (0.15, 0.7, 0.3, 0.15, 0.5, 0.9, 0.2, 0.4)
+
+
+def _traffic(cfg, n_users: int, prompt_budget: int, max_tokens: int, seed=0):
+    rng = np.random.RandomState(seed)
+    prompts = []
+    for i in range(n_users):
+        L = max(4, int(MIX[i % len(MIX)] * prompt_budget))
+        prompts.append(rng.randint(0, cfg.vocab_size, L))
+    return prompts
+
+
+def _run(engine, prompts, max_tokens: int):
+    uids = [engine.submit(p, max_tokens=max_tokens) for p in prompts]
+    t0 = time.perf_counter()
+    results = engine.run()
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(results[u]) for u in uids)
+    assert all(len(results[u]) == max_tokens for u in uids)
+    return n_tok / dt, results
+
+
+def sweep(arch: str, users, page_sizes, max_tokens: int, cache_len: int,
+          baseline: bool = True, warm: bool = True):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rows = []
+    for n_users in users:
+        prompts = _traffic(cfg, n_users, cache_len - max_tokens, max_tokens)
+        batch = min(n_users, 8)
+        ref_tps = None
+        if baseline:
+            ref = ReferenceEngine(params, cfg, batch_size=batch,
+                                  cache_len=cache_len)
+            if warm:  # jit caches are per-engine-instance: warm then re-time
+                _run(ref, prompts, max_tokens)
+            ref_tps, _ = _run(ref, prompts, max_tokens)
+            rows.append((f"serve/{arch}/seed/users={n_users}", ref_tps, ""))
+        for ps in page_sizes:
+            bound = decode_bound(cfg, batch, cache_len,
+                                 page_size=ps)["tokens_per_s"]
+            eng = ServeEngine(params, cfg, batch_size=batch,
+                              cache_len=cache_len, page_size=ps,
+                              prefill_chunk=32)
+            if warm:  # compile outside the timed run (steady-state tokens/s)
+                _run(eng, prompts, max_tokens)
+            tps, _ = _run(eng, prompts, max_tokens)
+            derived = (f"{tps / ref_tps:.1f}x-over-seed" if ref_tps
+                       else f"{tps / bound:.2e}-of-bound")
+            rows.append((
+                f"serve/{arch}/paged/users={n_users}/page={ps}", tps, derived))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--users", type=int, nargs="+", default=[4, 16])
+    ap.add_argument("--page-sizes", type=int, nargs="+", default=[8, 32])
+    ap.add_argument("--max-tokens", type=int, default=8)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--no-baseline", action="store_true")
+    ap.add_argument("--cold", action="store_true",
+                    help="include compile time in the measurement")
+    args = ap.parse_args(argv)
+    print("name,tokens_per_s,derived")
+    for name, tps, derived in sweep(args.arch, args.users, args.page_sizes,
+                                    args.max_tokens, args.cache_len,
+                                    baseline=not args.no_baseline,
+                                    warm=not args.cold):
+        print(f"{name},{tps:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

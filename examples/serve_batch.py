@@ -1,5 +1,5 @@
-"""Serve a small model with batched requests through the continuous-batching
-engine (prefill + lock-step decode + slot reuse).
+"""Serve mixed-length batched requests through the paged continuous-batching
+engine (chunked batched prefill + paged KV slots + FIFO admission).
 
   PYTHONPATH=src python examples/serve_batch.py
 """
@@ -14,16 +14,21 @@ from repro.serve.engine import ServeEngine
 def main():
     cfg = get_config("gemma3-4b", smoke=True)  # local+global attention mix
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, batch_size=4, cache_len=96)
+    # 4 slots, but a page pool sized for ~2.5 full sequences: admission
+    # reserves pages FIFO and queues the rest — overcommit without OOM
+    engine = ServeEngine(params, cfg, batch_size=4, cache_len=96,
+                         page_size=16, max_pages=16, prefill_chunk=32)
 
     rng = np.random.RandomState(0)
-    uids = [engine.submit(rng.randint(0, cfg.vocab_size, size=12),
-                          max_tokens=8) for _ in range(10)]
+    uids = [engine.submit(rng.randint(0, cfg.vocab_size, size=L),
+                          max_tokens=8)
+            for L in (12, 48, 7, 80, 25, 12, 60, 9, 33, 16)]
     results = engine.run()
     for uid in uids:
         print(f"request {uid:2d} -> {results[uid]}")
     assert len(results) == 10 and all(len(v) == 8 for v in results.values())
-    print("served 10 requests through 4 slots (continuous batching)")
+    print(f"served 10 mixed-length requests through 4 slots / 16 pages: "
+          f"{engine.stats}")
 
 
 if __name__ == "__main__":

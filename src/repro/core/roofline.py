@@ -86,6 +86,53 @@ def roofline_terms(result: Dict, hw: HwSpec = V5E, cfg=None,
     }
 
 
+def decode_bound(cfg, batch: int, context_len: int, hw: HwSpec = V5E,
+                 page_size: int = None) -> Dict:
+    """Analytic tokens/s upper bound for one batched decode tick.
+
+    The serving-engine analogue of the paper's practical-peak line: a decode
+    step reads every active parameter plus each attention layer's live KV,
+    and computes 2·N_active FLOPs per token plus the attention dot-products.
+    ``page_size`` models the paged cache's read granularity (a slot's KV
+    traffic rounds up to whole pages); windowed layers clamp their context
+    to the window.  benchmarks/serve_sweep.py scores measured engine
+    throughput against ``tokens_per_s`` from this bound.
+    """
+    n_act = active_param_count(cfg)
+    param_bytes = n_act * (2 if cfg.param_dtype == "bfloat16" else 4)
+    act_bytes = 2 if cfg.dtype == "bfloat16" else 4
+
+    flops = 2.0 * n_act * batch
+    kv_bytes = 0.0
+    for st in cfg.stages:
+        for blk in st.pattern:
+            if blk.mixer not in ("attn", "cross_attn") or blk.attn is None:
+                continue
+            a = blk.attn
+            t_eff = context_len if a.window is None else min(a.window,
+                                                             context_len)
+            if page_size and a.window is None:
+                # only global layers page; windowed layers keep dense
+                # per-slot circular buffers (see attention.init_paged_cache)
+                t_eff = -(-t_eff // page_size) * page_size
+            # qk^T + pv per query token, grouped heads
+            flops += st.repeats * 4.0 * batch * t_eff * a.num_heads * a.head_dim
+            kv_bytes += (st.repeats * 2.0 * batch * t_eff * a.num_kv_heads
+                         * a.head_dim * act_bytes)
+
+    t_comp = flops / hw.peak_flops
+    t_mem = (param_bytes + kv_bytes) / hw.hbm_bw
+    t = max(t_comp, t_mem, 1e-30)
+    return {
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "dominant": "compute" if t_comp >= t_mem else "memory",
+        "kv_bytes": kv_bytes,
+        "param_bytes": param_bytes,
+        "tokens_per_s": batch / t,
+    }
+
+
 def format_row(result: Dict, terms: Dict) -> str:
     return (f"| {result['arch']} | {result['shape']} | {result['mesh']} "
             f"| {terms['compute_s']:.3e} | {terms['memory_s']:.3e} "

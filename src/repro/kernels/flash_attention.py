@@ -68,6 +68,97 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Paged flash decode (serving): single-token attention over a block-table-
+# indexed KV pool.  The block table rides in as a scalar-prefetch argument so
+# the BlockSpec index_map can resolve page -> pool-row indirection before
+# each grid step's DMA — the kernel body itself never sees the indirection,
+# only a dense (page_size, hd) tile.  Grid = (B, kvH, n_pages_per_slot) with
+# the page dimension innermost (sequential online-softmax state in VMEM).
+
+
+def _paged_decode_kernel(ptab_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_ref, l_ref, acc_ref, *, page: int, npages: int,
+                         scale: float):
+    b, ji = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    n_valid = lens_ref[b] - ji * page  # written entries in this page
+
+    @pl.when(n_valid > 0)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (page, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, page)
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < n_valid, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(cols < n_valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * corr
+                        + jax.lax.dot(p, v_ref[0, :, 0].astype(jnp.float32)))
+        m_ref[...] = m_new
+
+    @pl.when(ji == pl.num_programs(2) - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode(q, kp, vp, ptab, lens, *, interpret: bool = True):
+    """Decode-step attention over a paged KV pool.
+
+    q: (B, kvH, G, hd); kp, vp: (n_pages, page, kvH, hd);
+    ptab: (B, pps) int32 block table (entries >= n_pages = unmapped);
+    lens: (B,) int32 valid entries per slot.  Returns (B, kvH, G, hd).
+    Full (non-windowed) causal layers only — every written entry is visible
+    to the single query token.
+    """
+    B, kvH, G, hd = q.shape
+    npages, page = kp.shape[0], kp.shape[1]
+    pps = ptab.shape[1]
+    scale = hd ** -0.5
+
+    def _page_idx(b, h, j, ptab_ref, lens_ref):
+        # unmapped sentinel pages clamp to a real pool row; their entries
+        # are dead via the lens mask in the kernel body
+        return (jnp.minimum(ptab_ref[b, j], npages - 1), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, kvH, pps),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd), _page_idx),
+            pl.BlockSpec((1, page, 1, hd), _page_idx),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_decode_kernel, page=page, npages=npages,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, kvH, G, hd), q.dtype),
+        interpret=interpret,
+    )(ptab, lens, q, kp, vp)
+
+
 @functools.partial(jax.jit, static_argnames=("bq", "bk", "window", "interpret"))
 def flash_attention(q, k, v, *, bq: int = 128, bk: int = 128, window=None,
                     interpret: bool = True):

@@ -29,6 +29,13 @@ def flash_attention(q, k, v, *, bq=128, bk=128, window=None):
                                interpret=_interpret())
 
 
+def paged_flash_decode(q, kp, vp, ptab, lens):
+    """Serving decode attention over a block-table-paged KV pool.
+    q: (B,kvH,G,hd); kp/vp: (n_pages,page,kvH,hd) -> (B,kvH,G,hd)."""
+    return _fa.paged_flash_decode(q, kp, vp, ptab, lens,
+                                  interpret=_interpret())
+
+
 def _flash_grouped_local(q, k, v, window):
     """Single-shard grouped-layout kernel call.
     q: (B,S,kvH,G,hd); k,v: (B,S,kvH,hd) -> (B,S,kvH,G,hd)."""

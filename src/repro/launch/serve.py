@@ -1,4 +1,5 @@
-"""Serving launcher: batched requests through the continuous-batching engine.
+"""Serving launcher: batched requests through the paged continuous-batching
+engine (``--engine reference`` runs the seed lock-step engine for A/B).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --requests 12
 """
@@ -10,23 +11,41 @@ import numpy as np
 from repro.configs import ARCH_NAMES, get_config, skip_reason
 from repro.models import model as M
 from repro.serve.engine import ServeEngine
+from repro.serve.reference import ReferenceEngine
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen2-1.5b")
+    ap.add_argument("--engine", choices=("paged", "reference"),
+                    default="paged")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-tokens", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-pages", type=int, default=None,
+                    help="physical page-pool budget (default: full)")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--flash-decode", action="store_true",
+                    help="route global-layer decode through the Pallas "
+                         "paged kernel")
     args = ap.parse_args(argv)
 
     if skip_reason(args.arch, "decode_32k"):
         raise SystemExit(f"{args.arch}: {skip_reason(args.arch, 'decode_32k')}")
     cfg = get_config(args.arch, smoke=True)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, batch_size=args.batch_size,
-                         cache_len=max(128, args.prompt_len + args.max_tokens))
+    cache_len = max(128, args.prompt_len + args.max_tokens)
+    if args.engine == "reference":
+        engine = ReferenceEngine(params, cfg, batch_size=args.batch_size,
+                                 cache_len=cache_len)
+    else:
+        engine = ServeEngine(params, cfg, batch_size=args.batch_size,
+                             cache_len=cache_len, page_size=args.page_size,
+                             max_pages=args.max_pages,
+                             prefill_chunk=args.prefill_chunk,
+                             flash_decode=args.flash_decode)
     rng = np.random.RandomState(0)
     uids = [engine.submit(rng.randint(0, cfg.vocab_size, args.prompt_len),
                           max_tokens=args.max_tokens)
@@ -34,6 +53,8 @@ def main(argv=None):
     results = engine.run()
     for uid in uids:
         print(f"req {uid:3d}: {results[uid]}")
+    if args.engine == "paged":
+        print(f"stats: {engine.stats}")
     return 0
 
 

@@ -193,6 +193,128 @@ def prefill_cache(params, cfg: AttnCfg, cache, x, positions):
     return cache
 
 
+# ---------------------------------------------------------------------------
+# Paged decode (per-slot positions, block-table KV pool)
+#
+# The serving engine's cache layout.  Global (window=None) layers store KV in
+# a pool of fixed-size pages indexed through a per-slot block table, so a
+# slot holding a short sequence only pins ceil(len/page) pages and the engine
+# can admit more slots than ``B × cache_len`` worth of physical cache.
+# Windowed layers keep per-slot circular buffers (their KV is bounded by the
+# window, so paging buys nothing) but gain per-slot positions/validity.
+# Unmapped block-table entries hold the OOB sentinel ``n_pages``: scatters to
+# them are dropped, gathers clamp to an arbitrary page whose entries are then
+# masked via ``kpos`` (-1 = never written).
+
+
+def init_paged_cache(cfg: AttnCfg, batch: int, cache_len: int, dtype, *,
+                     page_size: int, n_pages: int, window_extra: int = 0):
+    """Paged (global) or per-slot circular (windowed) decode cache.
+
+    ``window_extra`` over-provisions windowed buffers: a C-token chunk write
+    evicts the C oldest entries, so the earliest query in the chunk (which
+    still needs keys up to ``window`` behind it) requires capacity
+    ``window + C - 1`` — callers doing C-token chunked prefill must pass
+    ``window_extra = C - 1``.  Stale entries beyond the window stay masked
+    via ``kpos``, so extra capacity never changes attention results.
+    """
+    kvH, hd = cfg.num_kv_heads, cfg.head_dim
+    if cfg.window is not None:
+        cap = min(cfg.window, cache_len) + window_extra
+        return {
+            "k": jnp.zeros((batch, cap, kvH, hd), dtype),
+            "v": jnp.zeros((batch, cap, kvH, hd), dtype),
+            "kpos": jnp.full((batch, cap), -1, jnp.int32),
+            "slen": jnp.zeros((batch,), jnp.int32),
+        }
+    pps = -(-cache_len // page_size)  # block-table width (pages per slot)
+    return {
+        "kp": jnp.zeros((n_pages, page_size, kvH, hd), dtype),
+        "vp": jnp.zeros((n_pages, page_size, kvH, hd), dtype),
+        "ptab": jnp.full((batch, pps), n_pages, jnp.int32),
+        "kpos": jnp.full((batch, pps * page_size), -1, jnp.int32),
+        "slen": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _paged_masked_attn(q, k, v, kpos, q_pos, window):
+    """Per-slot masked softmax: q (B,C,kvH,G,hd), k/v (B,T,kvH,hd),
+    kpos (B,T), q_pos (B,C) -> (B,C,kvH,G,hd)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqkgd,btkd->bkgqt", q, k).astype(jnp.float32) * scale
+    ok = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= q_pos[:, :, None])
+    if window is not None:
+        ok &= (q_pos[:, :, None] - kpos[:, None, :]) < window
+    s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    p = jnp.where(ok[:, None, None, :, :], p, 0.0)
+    return jnp.einsum("bkgqt,btkd->bqkgd", p, v)
+
+
+def paged_attention_step(params, cfg: AttnCfg, x, cache, q_pos, valid, *,
+                         flash_decode: bool = False):
+    """One serving step against the paged cache: writes the C incoming
+    tokens, then attends over everything written so far.
+
+    x: (B, C, D) — C == 1 is a decode tick, C > 1 a prefill chunk.
+    q_pos: (B, C) absolute positions (per-slot); valid: (B, C) marks real
+    tokens (False rows/tails: no cache write, output ignored by the engine).
+    """
+    B, C, _ = x.shape
+    q = _project_q(params, cfg, x)  # (B,C,kvH,G,hd)
+    k_new, v_new = _project_kv(params, cfg, x)  # (B,C,kvH,hd)
+    if cfg.rope_theta is not None:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k_new = apply_rope(k_new, q_pos, cfg.rope_theta)
+
+    b_iota = jnp.broadcast_to(jnp.arange(B)[:, None], (B, C))
+    paged = "kp" in cache
+    cache = dict(cache)
+    if paged:
+        P = cache["kp"].shape[1]
+        n_pages = cache["kp"].shape[0]
+        pps = cache["ptab"].shape[-1]
+        page_slot = jnp.clip(q_pos // P, 0, pps - 1)
+        page = jnp.take_along_axis(cache["ptab"], page_slot, axis=1)
+        page = jnp.where(valid, page, n_pages)  # OOB -> scatter dropped
+        off = q_pos % P
+        cache["kp"] = cache["kp"].at[page, off].set(k_new, mode="drop")
+        cache["vp"] = cache["vp"].at[page, off].set(v_new, mode="drop")
+        T = pps * P
+        idx = jnp.where(valid, q_pos, T)
+    else:
+        cap = cache["k"].shape[1]
+        # chunk positions are contiguous per row: when C > cap the circular
+        # buffer wraps within one scatter, so keep only the last ``cap``
+        # writes per row (duplicate scatter indices have unspecified order)
+        row_max = jnp.max(jnp.where(valid, q_pos, -1), axis=1, keepdims=True)
+        keep = valid & (q_pos > row_max - cap)
+        idx = jnp.where(keep, q_pos % cap, cap)
+        cache["k"] = cache["k"].at[b_iota, idx].set(k_new, mode="drop")
+        cache["v"] = cache["v"].at[b_iota, idx].set(v_new, mode="drop")
+        T = cap
+    cache["kpos"] = cache["kpos"].at[b_iota, idx].set(q_pos, mode="drop")
+    cache["slen"] = jnp.maximum(
+        cache["slen"], jnp.max(jnp.where(valid, q_pos + 1, 0), axis=1))
+
+    if paged and flash_decode and C == 1:
+        from repro.kernels import ops as kops
+
+        o = kops.paged_flash_decode(q[:, 0], cache["kp"], cache["vp"],
+                                    cache["ptab"], cache["slen"])[:, None]
+    elif paged:
+        k = jnp.take(cache["kp"], cache["ptab"], axis=0, mode="clip")
+        v = jnp.take(cache["vp"], cache["ptab"], axis=0, mode="clip")
+        kvH, hd = cfg.num_kv_heads, cfg.head_dim
+        k = k.reshape(B, T, kvH, hd)
+        v = v.reshape(B, T, kvH, hd)
+        o = _paged_masked_attn(q, k, v, cache["kpos"], q_pos, cfg.window)
+    else:
+        o = _paged_masked_attn(q, cache["k"], cache["v"], cache["kpos"],
+                               q_pos, cfg.window)
+    return _out_proj(params, cfg, o), cache
+
+
 def attention_decode(params, cfg: AttnCfg, x, cache, *, sp_decode: bool = False):
     """x: (B,1,D). Returns (out (B,1,D), new_cache)."""
     B = x.shape[0]

@@ -55,10 +55,19 @@ def apply_frontend(params, feats, dtype):
 
 
 def sinusoidal_pos(seq_len: int, d: int, dtype, offset=0):
-    pos = jnp.arange(seq_len) + offset
+    return sinusoidal_at(jnp.arange(seq_len) + offset, d, dtype)
+
+
+def sinusoidal_at(positions, d: int, dtype):
+    """Sinusoidal encodings at explicit (possibly per-row) positions.
+
+    positions: (S,) or (B, S) int -> (S, d) / (B, S, d).  The per-row form
+    is what the paged serving path needs: slots sit at different absolute
+    positions within one batched step.
+    """
     half = d // 2
     freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / half)
-    ang = pos[:, None] * freqs[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
 
 
@@ -67,12 +76,16 @@ def rope_freqs(head_dim: int, theta: float):
 
 
 def apply_rope(x, positions, theta: float):
-    """x: (B, S, *head_axes, hd); positions: (S,)."""
+    """x: (B, S, *head_axes, hd); positions: (S,) shared across the batch,
+    or (B, S) per-row (mixed-length serving slots rotate at their own
+    absolute positions)."""
     hd = x.shape[-1]
     freqs = rope_freqs(hd, theta)  # (hd/2,)
-    ang = positions[:, None].astype(jnp.float32) * freqs  # (S, hd/2)
-    # broadcast (S, hd/2) -> (1, S, 1...1, hd/2) against x
-    shape = (1, x.shape[1]) + (1,) * (x.ndim - 3) + (hd // 2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    # broadcast (S, hd/2) -> (1, S, 1...1, hd/2) against x;
+    # (B, S, hd/2) -> (B, S, 1...1, hd/2)
+    lead = (1,) if positions.ndim == 1 else (x.shape[0],)
+    shape = lead + (x.shape[1],) + (1,) * (x.ndim - 3) + (hd // 2,)
     cos = jnp.cos(ang).reshape(shape)
     sin = jnp.sin(ang).reshape(shape)
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)

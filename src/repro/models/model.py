@@ -139,6 +139,67 @@ def decode_step(params, cfg: ModelCfg, state, tokens_t, *,
     return logits, {"layers": new_layers, "pos": state["pos"] + 1}
 
 
+# ---------------------------------------------------------------------------
+# Paged serving (per-slot positions; chunked prefill and decode share one step)
+
+
+def init_paged_state(params, cfg: ModelCfg, batch: int, cache_len: int, *,
+                     page_size: int, n_pages: int,
+                     window_extra: int = 0) -> Dict:
+    """Decode state for the paged serving engine: global-attention layers get
+    block-table-indexed KV pools (``n_pages`` pages of ``page_size``),
+    windowed layers per-slot circular buffers, recurrent mixers per-row
+    states.  Every slot tracks its own position — no lock-step ``pos``.
+
+    ``window_extra`` must be ``prefill_chunk - 1`` when chunked prefill is
+    used (see ``attention.init_paged_cache``)."""
+    if cfg.frontend is not None or cfg.is_encoder:
+        raise NotImplementedError("paged serving covers decoder token models")
+    dt = jnp.dtype(cfg.dtype)
+    states = [tfm.init_stage_state_paged(sp, cfg, st, batch, cache_len, dt,
+                                         page_size=page_size, n_pages=n_pages,
+                                         window_extra=window_extra)
+              for st, sp in zip(cfg.stages, params["stages"])]
+    return {"layers": states}
+
+
+def paged_step(params, cfg: ModelCfg, state, tokens, q_pos, valid, *,
+               with_logits: bool = True, flash_decode: bool = False):
+    """One serving step: C tokens per slot at per-slot absolute positions.
+
+    tokens/q_pos/valid: (B, C).  C == 1 is a decode tick (returns logits);
+    C > 1 is a prefill chunk (``with_logits=False`` skips the LM head — the
+    engine only samples from decode ticks).  Invalid entries write nothing
+    and leave recurrent state untouched, so idle slots ride along for free.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    x = emb.embed_tokens(params["embed"], tokens, dt)
+    if cfg.abs_pos == "sinusoidal":
+        x = x + emb.sinusoidal_at(q_pos, cfg.d_model, dt)
+    new_layers = []
+    for st, sp, ss in zip(cfg.stages, params["stages"], state["layers"]):
+        x, ns = tfm.stage_step_paged(sp, cfg, st, x, ss, q_pos, valid,
+                                     flash_decode=flash_decode)
+        new_layers.append(ns)
+    new_state = {"layers": new_layers}
+    if not with_logits:
+        return None, new_state
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    tied = params["embed"]["tok_embed"] if cfg.tie_embeddings else None
+    logits = emb.logits_from_hidden(params.get("head", {}), x, tied_embed=tied)
+    return logits, new_state
+
+
+def reset_paged_slots(cfg: ModelCfg, state, init_state, mask, ptab_rows) -> Dict:
+    """Admission/eviction: for slots where ``mask`` is set, install the
+    host-allocated block-table rows and restore all other per-row state from
+    the fresh-init template (KV pools are shared and untouched)."""
+    new_layers = [tfm.reset_stage_slots(st, ss, is0, mask, ptab_rows)
+                  for st, ss, is0 in zip(cfg.stages, state["layers"],
+                                         init_state["layers"])]
+    return {"layers": new_layers}
+
+
 def prefill(params, cfg: ModelCfg, state, tokens, enc_feats=None) -> Dict:
     """Teacher-forced prompt ingestion: fills every attention cache and rolls
     recurrent states forward. tokens: (B,S)."""

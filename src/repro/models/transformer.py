@@ -220,6 +220,133 @@ def init_stage_state(params, cfg: ModelCfg, stage: Stage, batch: int,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Paged serving step (per-slot positions; C >= 1 tokens per slot per call)
+
+
+def init_block_state_paged(params, cfg: ModelCfg, blk: BlockCfg, batch: int,
+                           cache_len: int, dtype, *, page_size: int,
+                           n_pages: int, window_extra: int = 0):
+    if blk.mixer == "attn":
+        return attn.init_paged_cache(blk.attn, batch, cache_len, dtype,
+                                     page_size=page_size, n_pages=n_pages,
+                                     window_extra=window_extra)
+    if blk.mixer == "cross_attn":
+        raise NotImplementedError("paged serving covers token models only")
+    if blk.mixer == "mamba":
+        return mamba_lib.init_mamba_state(blk.mamba, cfg.d_model, batch, dtype)
+    if blk.mixer == "mlstm":
+        return xlstm_lib.init_mlstm_state(blk.xlstm, cfg.d_model, batch, dtype)
+    return xlstm_lib.init_slstm_state(blk.xlstm, cfg.d_model, batch, dtype)
+
+
+def init_stage_state_paged(params, cfg: ModelCfg, stage: Stage, batch: int,
+                           cache_len: int, dtype, *, page_size: int,
+                           n_pages: int, window_extra: int = 0):
+    mk = lambda: [init_block_state_paged(None, cfg, blk, batch, cache_len,
+                                         dtype, page_size=page_size,
+                                         n_pages=n_pages,
+                                         window_extra=window_extra)
+                  for blk in stage.pattern]
+    if stage.repeats == 1:
+        return mk()
+    one = mk()
+    return [jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (stage.repeats,) + x.shape).copy(), s)
+        for s in one]
+
+
+def _masked_recurrent_roll(dec, p, c, h, s, valid):
+    """Scan a single-step recurrent decode over the C chunk positions,
+    advancing state only where ``valid`` — pad tails and idle slots keep
+    their state bit-identical.  h: (B,C,D), valid: (B,C)."""
+
+    def step(s, inp):
+        h_t, v_t = inp
+        y, s_new = dec(p, c, h_t[:, None, :], s)
+        s = jax.tree.map(
+            lambda a, b: jnp.where(
+                v_t.reshape((-1,) + (1,) * (a.ndim - 1)), a, b), s_new, s)
+        return s, y[:, 0]
+
+    s, ys = jax.lax.scan(
+        step, s, (jnp.moveaxis(h, 1, 0), jnp.moveaxis(valid, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), s
+
+
+def block_step_paged(params, cfg: ModelCfg, blk: BlockCfg, x, state, q_pos,
+                     valid, *, flash_decode: bool = False):
+    h = rmsnorm(params["mixer_norm"], x, cfg.norm_eps)
+    if blk.mixer == "attn":
+        m, state = attn.paged_attention_step(params["mixer"], blk.attn, h,
+                                             state, q_pos, valid,
+                                             flash_decode=flash_decode)
+    elif blk.mixer == "mamba":
+        m, state = _masked_recurrent_roll(
+            mamba_lib.mamba_decode, params["mixer"], blk.mamba, h, state, valid)
+    elif blk.mixer == "mlstm":
+        m, state = _masked_recurrent_roll(
+            xlstm_lib.mlstm_decode, params["mixer"], blk.xlstm, h, state, valid)
+    elif blk.mixer == "slstm":
+        m, state = _masked_recurrent_roll(
+            xlstm_lib.slstm_decode, params["mixer"], blk.xlstm, h, state, valid)
+    else:
+        raise NotImplementedError(f"paged serving: unsupported mixer {blk.mixer}")
+    x = x + m
+    if blk.ffn is not None:
+        h = rmsnorm(params["ffn_norm"], x, cfg.norm_eps)
+        if blk.ffn == "mlp":
+            f = mlp_fwd(params["ffn"], blk.mlp, h)
+        else:
+            f, _ = moe_fwd(params["ffn"], blk.moe, h)
+        x = x + f
+    return x, state
+
+
+def stage_step_paged(params, cfg: ModelCfg, stage: Stage, x, states, q_pos,
+                     valid, *, flash_decode: bool = False):
+    if stage.repeats == 1:
+        new_states = []
+        for i, blk in enumerate(stage.pattern):
+            x, s = block_step_paged(params[i], cfg, blk, x, states[i], q_pos,
+                                    valid, flash_decode=flash_decode)
+            new_states.append(s)
+        return x, new_states
+
+    def body(x, xs):
+        group_params, group_states = xs
+        new_states = []
+        for i, blk in enumerate(stage.pattern):
+            x, s = block_step_paged(group_params[i], cfg, blk, x,
+                                    group_states[i], q_pos, valid,
+                                    flash_decode=flash_decode)
+            new_states.append(s)
+        return x, tuple(new_states)
+
+    x, new_states = jax.lax.scan(body, x, (tuple(params), tuple(states)))
+    return x, list(new_states)
+
+
+def reset_stage_slots(stage: Stage, states, init_states, mask, ptab_rows):
+    """Reset per-slot rows (admission): install ``ptab_rows`` into block
+    tables, restore every other per-row leaf from the fresh-init template.
+    KV pools are shared across slots and left alone — stale pages are dead
+    via kpos/ptab.  mask: (B,), ptab_rows: (B, pages_per_slot)."""
+    lead = 1 if stage.repeats > 1 else 0
+    out = []
+    for s_blk, i_blk in zip(states, init_states):
+        new = {}
+        for name, leaf in s_blk.items():
+            if name in ("kp", "vp"):
+                new[name] = leaf
+                continue
+            m = mask.reshape((1,) * lead + (-1,) + (1,) * (leaf.ndim - lead - 1))
+            src = ptab_rows if name == "ptab" else i_blk[name]
+            new[name] = jnp.where(m, src, leaf)
+        out.append(new)
+    return out
+
+
 def stage_decode(params, cfg: ModelCfg, stage: Stage, x, states, *,
                  sp_decode: bool = False):
     if stage.repeats == 1:

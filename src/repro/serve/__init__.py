@@ -1,1 +1,3 @@
 from repro.serve.serve_step import make_serve_step, decode_state_specs  # noqa: F401
+from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.reference import ReferenceEngine, Request  # noqa: F401

@@ -1,12 +1,22 @@
 """Distributed flash-decode: single-token attention over a sharded KV cache.
 
-The KV cache's *sequence* dim is sharded (normal decode: over 'model';
-long-context batch=1: over ('data','model')).  Each shard produces the
-partial online-softmax terms (local max, local sum, local weighted values);
-a pmax + two psums over the sequence axes combine them.  The communicated
-payload per layer is O(B·kvH·G·hd) — independent of context length — which
-is what makes 32k–512k contexts serveable at all (an all-gathered KV would
-be GBs per layer per step).
+One of the two decode-attention paths under ``serve/``:
+
+- **This module** — the *sharded lock-step* path used by ``launch.serve``
+  dry-runs and the distributed decode shapes: the KV cache's *sequence* dim
+  is sharded (normal decode: over 'model'; long-context batch=1: over
+  ('data','model')).  Each shard produces the partial online-softmax terms
+  (local max, local sum, local weighted values); a pmax + two psums over the
+  sequence axes combine them.  The communicated payload per layer is
+  O(B·kvH·G·hd) — independent of context length — which is what makes
+  32k–512k contexts serveable at all (an all-gathered KV would be GBs per
+  layer per step).
+- **The paged per-slot path** — ``models.layers.attention
+  .paged_attention_step`` (jnp gather over block tables) and
+  ``kernels.flash_attention.paged_flash_decode`` (Pallas, block table as
+  scalar prefetch), driven by ``serve.engine.ServeEngine``.  Use that for
+  mixed-length continuous batching; use this one when the KV of a single
+  sequence outgrows one device.
 """
 from __future__ import annotations
 

@@ -1,12 +1,30 @@
-"""Batched serving engine: prefill + decode with slot-based continuous
-batching.
+"""Scalable serving engine: chunked batched prefill + paged KV slots.
 
-A fixed pool of ``batch_size`` slots decodes in lock-step (one jit'd
-``decode_step`` per tick).  Finished sequences (EOS or max_tokens) free
-their slot; queued requests are prefilled into free slots between ticks.
-This is the standard continuous-batching control loop (vLLM-style) reduced
-to its JAX-native core: all state lives in pytrees, so the same engine runs
-under a mesh with the distributed flash-decode.
+The paper's serving-time analogue of the Nproc×Nthread sweep needs one
+engine that stays near peak across any mix of concurrent users and prompt
+lengths.  The seed engine (now ``reference.ReferenceEngine``) could not
+express that: batch-1 prefills (one compile per prompt length), lock-step
+positions, and per-slot ``cache_len`` KV.  This engine replaces all three:
+
+- **Chunked, batched prefill** — every slot with outstanding prompt tokens
+  advances by one fixed-size chunk per prefill tick, all slots in a single
+  jit'd ``(B, chunk)`` call with per-slot positions and validity masks.
+  Prompts are padded to chunk multiples; long prompts span several ticks, so
+  prefill work interleaves with decode instead of stalling the whole pool.
+  Exactly two programs are ever compiled — ``(B, chunk)`` prefill and
+  ``(B, 1)`` decode — independent of traffic.
+- **Paged KV slots** — global-attention KV lives in a page pool indexed by
+  per-slot block tables (``models.layers.attention.init_paged_cache``).  A
+  request pins only ``ceil((len + max_tokens) / page_size)`` pages, reserved
+  at admission (no mid-flight OOM), so the engine admits ``batch_size``
+  slots against a smaller physical budget and queues FIFO when the pool is
+  exhausted.  Windowed layers keep per-slot circular buffers (bounded KV).
+- **Host/device split** — the page allocator and block tables are host-side
+  numpy (the vLLM control-plane split); the device only ever sees dense
+  arrays, so the whole state remains a shardable pytree.
+
+Greedy decode is token-identical to the reference engine on equal-length
+waves, and to a solo batch-1 run on any mix (tests/test_serve.py).
 """
 from __future__ import annotations
 
@@ -15,115 +33,195 @@ from collections import deque
 from typing import Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelCfg
 from repro.models import model as M
+from repro.serve.reference import Request
 
 
 @dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray  # (S,) int32
-    max_tokens: int = 16
-    eos_id: Optional[int] = None
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+class _Slot:
+    req: Request
+    pages: List[int]
+    fill: int = 0  # prompt tokens written so far
+    pos: int = 0  # next absolute write position (== len(prompt) at decode)
+    last_tok: int = 0
 
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelCfg, *, batch_size: int = 4,
-                 cache_len: int = 256, greedy: bool = True):
+                 cache_len: int = 256, page_size: int = 16,
+                 max_pages: Optional[int] = None, prefill_chunk: int = 32,
+                 greedy: bool = True, flash_decode: bool = False):
+        if not greedy:
+            raise NotImplementedError("sampling: greedy only for now")
         self.params = params
         self.cfg = cfg
         self.B = batch_size
         self.cache_len = cache_len
-        self._decode = jax.jit(
-            lambda p, s, t: M.decode_step(p, cfg, s, t))
+        self.page_size = page_size
+        self.chunk = prefill_chunk
+        self.pps = -(-cache_len // page_size)  # block-table width
+        self._has_paged = any(
+            blk.mixer == "attn" and blk.attn.window is None
+            for st in cfg.stages for blk in st.pattern)
+        self.n_pages = (max_pages if max_pages is not None
+                        else batch_size * self.pps)
+        self._free: List[int] = list(range(self.n_pages))
         self.queue: deque = deque()
-        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.slots: List[Optional[_Slot]] = [None] * batch_size
         self._uid = 0
+        self.completion_order: List[int] = []
+        self.stats = {"chunk_ticks": 0, "decode_ticks": 0, "ticks": 0,
+                      "pages_in_use_peak": 0}
+
+        # donate the state: the page pools dominate the pytree and must be
+        # updated in place, not copied, on every tick of the hot loop
+        step = lambda wl: (lambda p, s, t, qp, v: M.paged_step(
+            p, cfg, s, t, qp, v, with_logits=wl, flash_decode=flash_decode))
+        self._chunk_step = jax.jit(step(False), donate_argnums=(1,))
+        self._decode_step = jax.jit(step(True), donate_argnums=(1,))
+        self._reset = jax.jit(
+            lambda s, s0, m, rows: M.reset_paged_slots(cfg, s, s0, m, rows),
+            donate_argnums=(0,))
 
     def submit(self, prompt, max_tokens: int = 16, eos_id=None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if prompt.size + max_tokens > self.cache_len:
+            raise ValueError(
+                f"len(prompt)+max_tokens = {prompt.size + max_tokens} "
+                f"exceeds cache_len={self.cache_len}")
         self._uid += 1
-        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
-                                  max_tokens, eos_id))
+        req = Request(self._uid, prompt, max_tokens, eos_id)
+        need = self._pages_needed(req)
+        if need > self.n_pages:
+            raise ValueError(
+                f"request needs {need} pages but the pool has only "
+                f"{self.n_pages} (raise max_pages or shrink the request)")
+        self.queue.append(req)
         return self._uid
 
     # -- internals --------------------------------------------------------
-    def _fill_slots(self, state, last_tok):
-        """Prefill queued requests into free slots (one at a time: per-slot
-        prefill uses a batch-1 forward and writes that slot's cache rows)."""
+    def _pages_needed(self, req: Request) -> int:
+        if not self._has_paged:
+            return 0
+        return -(-(len(req.prompt) + req.max_tokens) // self.page_size)
+
+    def _admit(self, state):
+        """FIFO admission: a request enters a free slot only when its whole
+        page reservation fits (no mid-flight OOM, no reordering)."""
+        mask = np.zeros(self.B, bool)
+        rows = np.full((self.B, self.pps), self.n_pages, np.int32)
         for b in range(self.B):
             if self.slots[b] is not None or not self.queue:
                 continue
+            need = self._pages_needed(self.queue[0])
+            if need > len(self._free):
+                break  # strict FIFO: head of line waits for pages
             req = self.queue.popleft()
-            self.slots[b] = req
-            one = M.init_decode_state(self.params, self.cfg, 1, self.cache_len)
-            one = M.prefill(self.params, self.cfg, one, req.prompt[None, :])
-            state = _write_slot(state, one, b)
-            last_tok = last_tok.at[b, 0].set(int(req.prompt[-1]))
-        return state, last_tok
+            pages = [self._free.pop() for _ in range(need)]
+            rows[b, :need] = pages
+            self.slots[b] = _Slot(req, pages)
+            mask[b] = True
+        if mask.any():
+            in_use = self.n_pages - len(self._free)
+            self.stats["pages_in_use_peak"] = max(
+                self.stats["pages_in_use_peak"], in_use)
+            state = self._reset(state, self._template, mask, rows)
+        return state
 
-    def run(self, max_ticks: int = 256) -> Dict[int, List[int]]:
+    def _prefill_tick(self, state):
+        """Advance every slot with outstanding prompt tokens by one chunk —
+        a single batched (B, chunk) call with per-slot positions."""
+        C = self.chunk
+        tokens = np.zeros((self.B, C), np.int32)
+        q_pos = np.zeros((self.B, C), np.int32)
+        valid = np.zeros((self.B, C), bool)
+        for b, s in enumerate(self.slots):
+            if s is None:
+                continue
+            L = len(s.req.prompt)
+            if s.fill >= L:
+                continue
+            n = min(C, L - s.fill)
+            tokens[b, :n] = s.req.prompt[s.fill:s.fill + n]
+            q_pos[b] = s.fill + np.arange(C)
+            valid[b, :n] = True
+            s.fill += n
+            if s.fill >= L:
+                # decode resumes from the last prompt token at position L
+                # (same scheme as the reference engine, for token identity)
+                s.pos = L
+                s.last_tok = int(s.req.prompt[-1])
+        _, state = self._chunk_step(self.params, state, tokens, q_pos, valid)
+        self.stats["chunk_ticks"] += 1
+        return state
+
+    def _decode_tick(self, state):
+        tokens = np.zeros((self.B, 1), np.int32)
+        q_pos = np.zeros((self.B, 1), np.int32)
+        valid = np.zeros((self.B, 1), bool)
+        for b, s in enumerate(self.slots):
+            if s is None:
+                continue
+            tokens[b, 0] = s.last_tok
+            q_pos[b, 0] = s.pos
+            valid[b, 0] = True
+        logits, state = self._decode_step(self.params, state, tokens, q_pos,
+                                          valid)
+        nxt = np.asarray(jax.numpy.argmax(logits[:, -1], axis=-1))
+        self.stats["decode_ticks"] += 1
+        results = {}
+        for b, s in enumerate(self.slots):
+            if s is None:
+                continue
+            tok = int(nxt[b])
+            req = s.req
+            req.out_tokens.append(tok)
+            s.pos += 1
+            if (len(req.out_tokens) >= req.max_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)):
+                results[req.uid] = req.out_tokens
+                self.completion_order.append(req.uid)
+                self._free.extend(s.pages)
+                self.slots[b] = None
+            else:
+                s.last_tok = tok
+        return state, results
+
+    def run(self, max_ticks: int = 4096) -> Dict[int, List[int]]:
         """Drain the queue; returns {uid: generated tokens}."""
-        state = M.init_decode_state(self.params, self.cfg, self.B,
-                                    self.cache_len)
-        last_tok = jnp.zeros((self.B, 1), jnp.int32)
+        state = M.init_paged_state(self.params, self.cfg, self.B,
+                                   self.cache_len, page_size=self.page_size,
+                                   n_pages=self.n_pages,
+                                   window_extra=self.chunk - 1)
+        # the reset template must not alias the (donated) live state
+        self._template = jax.tree.map(jax.numpy.copy, state)
         results: Dict[int, List[int]] = {}
         for _ in range(max_ticks):
             if all(s is None for s in self.slots) and not self.queue:
                 break
-            state, last_tok = self._fill_slots(state, last_tok)
-            logits, state = self._decode(self.params, state, last_tok)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            nxt_host = np.asarray(nxt)
-            for b, req in enumerate(self.slots):
-                if req is None:
-                    continue
-                tok = int(nxt_host[b])
-                req.out_tokens.append(tok)
-                if (len(req.out_tokens) >= req.max_tokens
-                        or (req.eos_id is not None and tok == req.eos_id)):
-                    results[req.uid] = req.out_tokens
-                    self.slots[b] = None
-                else:
-                    last_tok = last_tok.at[b, 0].set(tok)
-        for req in self.slots:  # drain partials on tick budget exhaustion
-            if req is not None:
-                results[req.uid] = req.out_tokens
+            state = self._admit(state)
+            if any(s is not None and s.fill < len(s.req.prompt)
+                   for s in self.slots):
+                state = self._prefill_tick(state)
+            elif any(s is not None for s in self.slots):
+                state, done = self._decode_tick(state)
+                results.update(done)
+            self.stats["ticks"] += 1
+        # drain partials on tick-budget exhaustion, releasing slots/pages so
+        # the engine stays reusable (no page leak, no stale decode state);
+        # never-admitted requests report their (empty) partials too, so every
+        # submitted uid is present in the result
+        for b, s in enumerate(self.slots):
+            if s is not None:
+                results[s.req.uid] = s.req.out_tokens
+                self._free.extend(s.pages)
+                self.slots[b] = None
+        while self.queue:
+            req = self.queue.popleft()
+            results[req.uid] = req.out_tokens
         return results
-
-
-def _write_slot(state, one, b: int):
-    """Copy a batch-1 decode state into slot ``b`` of the pooled state.
-
-    Positions are lock-step across slots (k_pos is shared per layer), so the
-    engine admits equal-length prompt waves; per-slot position tracking
-    (k_pos per batch row) is the production extension and is noted in
-    DESIGN.md §Future.  Recurrent states are per-batch-row and copy cleanly.
-    """
-    flat_p, treedef = jax.tree_util.tree_flatten_with_path(state)
-    flat_o = [l for _, l in jax.tree_util.tree_flatten_with_path(one)[0]]
-    out = []
-    for (path, pl), sl in zip(flat_p, flat_o):
-        name = None
-        for p in reversed(path):
-            if isinstance(p, jax.tree_util.DictKey):
-                name = p.key
-                break
-        if pl.ndim == sl.ndim and pl.shape == sl.shape and pl.ndim == 0:
-            out.append(jnp.maximum(pl, sl))  # scalar pos: lock-step max
-        elif name == "k_pos":
-            out.append(sl)  # shared slot positions (lock-step)
-        else:
-            # batch dim is the first dim whose size differs (pool B vs 1)
-            axis = next((i for i, (a, c) in enumerate(zip(pl.shape, sl.shape))
-                         if a != c), None)
-            if axis is None:
-                out.append(sl)
-            else:
-                out.append(jax.lax.dynamic_update_slice_in_dim(
-                    pl, sl.astype(pl.dtype), b, axis))
-    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,4 +1,10 @@
-"""The jit-compiled serving step (one decode token) + state sharding rules."""
+"""The jit-compiled serving step (one decode token) + state sharding rules.
+
+``STATE_AXES`` names the logical axes of every decode-state leaf — both the
+lock-step cache (k/v/k_pos/pos) and the paged engine's leaves (kp/vp page
+pools, ptab block tables, kpos per-slot positions, slen fill counts) — so
+``decode_state_specs`` can lay either state out on a mesh.
+"""
 from __future__ import annotations
 
 from typing import Dict
@@ -21,11 +27,18 @@ def make_serve_step(cfg: ModelCfg, *, sp_decode: bool = False):
 # leaf name -> logical axes for decode-state leaves (unstacked; a scanned
 # stage adds a leading "layer" dim)
 STATE_AXES: Dict[str, tuple] = {
-    # attention KV cache
+    # attention KV cache (lock-step engine)
     "k": ("act_kv_batch", "act_kv_seq", "act_kv_heads", None),
     "v": ("act_kv_batch", "act_kv_seq", "act_kv_heads", None),
     "k_pos": ("act_kv_seq",),
     "pos": (),
+    # paged KV (per-slot engine): page pools shard over KV heads; block
+    # tables / positions are per-slot and follow the batch axis
+    "kp": (None, None, "act_kv_heads", None),
+    "vp": (None, None, "act_kv_heads", None),
+    "ptab": ("act_kv_batch", None),
+    "kpos": ("act_kv_batch", None),
+    "slen": ("act_kv_batch",),
     # mamba
     "h": ("act_kv_batch", "tensor", None),
     "conv": ("act_kv_batch", None, "tensor"),

@@ -1,0 +1,119 @@
+"""Optional-``hypothesis`` shim for the test suite.
+
+``hypothesis`` is a dev-only dependency and is absent from some runtime
+images (the tier-1 gate must collect everywhere).  When it is installed we
+re-export the real ``given`` / ``settings`` / ``strategies``; when it is
+missing we fall back to a deterministic parametrized sampler: each
+``@given(x=st.integers(a, b), ...)`` becomes a ``pytest.mark.parametrize``
+over a fixed set of example tuples (bounds first, then seeded draws), so the
+property tests still run — with fixed rather than searched examples.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+
+import pytest
+
+try:  # pragma: no cover - exercised implicitly by which branch imports
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _N_EXAMPLES = 5  # per-test fallback example count (bounds + seeded draws)
+
+    class _Strategy:
+        """A value source with deterministic indexed draws."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_at(self, i: int, rnd: random.Random):
+            return self._draw(i, rnd)
+
+    class _strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            def draw(i, rnd):
+                if i == 0:
+                    return min_value
+                if i == 1:
+                    return max_value
+                return rnd.randint(min_value, max_value)
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            def draw(i, rnd):
+                if i == 0:
+                    return min_value
+                if i == 1:
+                    return max_value
+                return rnd.uniform(min_value, max_value)
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+
+            def draw(i, rnd):
+                if i < len(elements):
+                    return elements[i]
+                return rnd.choice(elements)
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def booleans():
+            return _strategies.sampled_from([False, True])
+
+    st = _strategies()
+
+    def settings(*_a, **_kw):  # noqa: D401 - mirror hypothesis.settings
+        """No-op decorator factory (deadline/max_examples are meaningless
+        for the fixed-example fallback)."""
+
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(**strategy_kw):
+        names = sorted(strategy_kw)
+
+        def deco(fn):
+            rnd = random.Random(f"hypothesis-compat:{fn.__name__}")
+            cases = []
+            for i in range(_N_EXAMPLES):
+                cases.append(tuple(strategy_kw[n].example_at(i, rnd)
+                                   for n in names))
+            # dedupe (tiny domains can repeat the bound cases)
+            seen, uniq = set(), []
+            for c in cases:
+                if c not in seen:
+                    seen.add(c)
+                    uniq.append(c)
+
+            def wrapper(*args, **kw):
+                case = kw.pop("_hc_case")
+                kw.update(dict(zip(names, case)))
+                return fn(*args, **kw)
+
+            # pytest reads the signature to bind fixtures/params: expose
+            # ``_hc_case`` plus the original non-strategy params (fixtures)
+            sig = inspect.signature(fn)
+            passthrough = [p for n, p in sig.parameters.items()
+                           if n not in names]
+            wrapper.__signature__ = sig.replace(parameters=passthrough + [
+                inspect.Parameter("_hc_case",
+                                  inspect.Parameter.KEYWORD_ONLY)])
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return pytest.mark.parametrize("_hc_case", uniq)(wrapper)
+
+        return deco

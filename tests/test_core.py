@@ -67,6 +67,52 @@ def test_constant_memory_protocol():
         assert abs(total - base) / base < 0.1, (nproc, total, base)
 
 
+def test_factorizations_are_power_of_two_splits():
+    assert factorizations(8) == [(1, 8), (2, 4), (4, 2), (8, 1)]
+    assert factorizations(1) == [(1, 1)]
+    for n in (4, 16, 64):
+        assert all(p * t == n for p, t in factorizations(n))
+        assert len(factorizations(n)) == n.bit_length()
+
+
+def test_sweepcell_n_alignment_and_monotonicity():
+    """SweepCell.n stays a 256-aligned, floor-clamped, non-increasing
+    function of Nproc (the constant-total-memory protocol)."""
+    prev = None
+    for nproc in (1, 2, 4, 8, 16, 64, 256):
+        n = SweepCell(nproc, 256 // min(nproc, 256)).n
+        assert n % 256 == 0 and n >= 256
+        assert prev is None or n <= prev
+        prev = n
+    assert SweepCell(256, 1, n0=512).n == 256  # floor clamp
+
+
+@pytest.mark.slow
+def test_run_sweep_cache_never_scores_below_flat(multidevice):
+    """Golden check on a small pod: single-pass ('cache') accumulation never
+    scores below 8-pass ('flat') for the same cell — the paper's
+    MCDRAM-cache-vs-flat ordering, reproduced by the roofline scorer."""
+    import json
+
+    out = multidevice("""
+        import json
+        from repro.core.sweep import run_sweep
+        rows = run_sweep(n_units=8, placements=("colsplit",),
+                         memories=("cache", "flat"), n0=4096)
+        print(json.dumps([{k: r[k] for k in
+                           ("nproc", "nthread", "memory", "peak_fraction")}
+                          for r in rows]))
+    """, n_devices=8)
+    rows = json.loads(out.strip().splitlines()[-1])
+    cells = {}
+    for r in rows:
+        cells.setdefault((r["nproc"], r["nthread"]), {})[r["memory"]] = \
+            r["peak_fraction"]
+    assert len(cells) == 4  # (1,8) (2,4) (4,2) (8,1)
+    for cell, scores in cells.items():
+        assert scores["cache"] >= scores["flat"], (cell, scores)
+
+
 def test_score_identifies_dominant_term():
     row = {"flops_per_device": 197e12, "bytes_per_device": 1e9,
            "collective_bytes_per_device": 0.0, "model_flops": 197e12,

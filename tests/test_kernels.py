@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 
@@ -96,6 +96,47 @@ def test_flash_causality(sq, hd, g):
     o2 = ops.flash_attention(q, k2, v2, bq=16, bk=16)
     np.testing.assert_allclose(o1[:, : t + 1], o2[:, : t + 1],
                                rtol=1e-5, atol=1e-5)
+
+
+def _paged_decode_ref(q, kp, vp, ptab, lens):
+    """jnp oracle: gather the block table, mask by fill count, softmax."""
+    B, kvH, G, hd = q.shape
+    pps, page = ptab.shape[1], kp.shape[1]
+    k = jnp.take(kp, ptab, axis=0, mode="clip").reshape(B, pps * page, kvH, hd)
+    v = jnp.take(vp, ptab, axis=0, mode="clip").reshape(B, pps * page, kvH, hd)
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    mask = jnp.arange(pps * page)[None] < lens[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("page,pps", [(8, 4), (16, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_flash_decode_allclose(page, pps, dtype):
+    """Block-table indirection + partial-page masking vs the gather oracle,
+    including unmapped sentinel pages and an empty slot."""
+    B, kvH, G, hd = 3, 2, 4, 16
+    npages = B * pps
+    q = jax.random.normal(KEY, (B, kvH, G, hd), dtype)
+    kp = jax.random.normal(jax.random.PRNGKey(1), (npages, page, kvH, hd), dtype)
+    vp = jax.random.normal(jax.random.PRNGKey(2), (npages, page, kvH, hd), dtype)
+    rng = np.random.RandomState(0)
+    perm = rng.permutation(npages)
+    ptab = np.full((B, pps), npages, np.int32)  # sentinel = unmapped
+    lens = np.asarray([pps * page, 1 + page // 2, 0], np.int32)
+    for b in range(B):
+        used = -(-int(lens[b]) // page)
+        ptab[b, :used] = perm[b * pps:b * pps + used]
+    got = ops.paged_flash_decode(q, kp, vp, jnp.asarray(ptab),
+                                 jnp.asarray(lens))
+    want = _paged_decode_ref(q, kp, vp, jnp.asarray(ptab), jnp.asarray(lens))
+    # empty slot: kernel yields zeros, oracle yields a uniform average —
+    # both are "no valid keys"; compare active slots only
+    np.testing.assert_allclose(np.asarray(got[:2], np.float32),
+                               np.asarray(want[:2], np.float32), **_tol(dtype))
+    assert not bool(jnp.isnan(got).any())
 
 
 # ---------------------------------------------------------------------------

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import AttnCfg, MambaCfg, MoECfg, XLSTMCfg
 from repro.models.layers import attention as A
@@ -76,6 +76,34 @@ def test_chunked_equals_full():
     y_full = A.attention_fwd(p, cfg, x, q_chunk=64)  # full path (S <= 2*chunk)
     y_chunk = A.attention_fwd(p, cfg, x, q_chunk=16)
     np.testing.assert_allclose(y_full, y_chunk, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("window,chunk", [(None, 6), (8, 6), (8, 24), (8, 1)])
+def test_paged_chunked_prefill_matches_fwd_oracle(window, chunk):
+    """Numerical oracle for the serving prefill path: feeding a prompt
+    through paged_attention_step in C-token chunks must reproduce
+    attention_fwd's full-sequence outputs at every position — including
+    windowed layers where a chunk write evicts circular-buffer entries
+    (window_extra = C-1 keeps every in-window key resident)."""
+    cfg, p = _mk_attn(window=window)
+    B, S = 2, 24
+    x = jax.random.normal(KEY, (B, S, 32), jnp.float32)
+    want = A.attention_fwd(p, cfg, x, positions=jnp.arange(S), q_chunk=128)
+    cache = A.init_paged_cache(cfg, B, 32, jnp.float32, page_size=4,
+                               n_pages=2 * 8, window_extra=chunk - 1)
+    if "ptab" in cache:  # map pages: slot b owns pool rows [8b, 8(b+1))
+        cache["ptab"] = jnp.asarray([[8 * b + i for i in range(8)]
+                                     for b in range(B)], jnp.int32)
+    outs = []
+    for c0 in range(0, S, chunk):
+        C = min(chunk, S - c0)
+        q_pos = jnp.broadcast_to(c0 + jnp.arange(C), (B, C))
+        o, cache = A.paged_attention_step(
+            p, cfg, x[:, c0:c0 + C], cache, q_pos, jnp.ones((B, C), bool))
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
 
 
 def test_sliding_window_masks_far_past():
