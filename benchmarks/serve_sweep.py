@@ -3,30 +3,39 @@
 The paper sweeps (Nproc × Nthread) at constant memory and shows that one
 set of system settings keeps every factorization near peak.  The serving
 analogue sweeps (concurrent users × prompt-length mix × page size) through
-``serve.ServeEngine`` (paged KV + chunked batched prefill) and scores
-measured tokens/s three ways:
+``serve.ServeEngine`` and scores measured tokens/s four ways:
 
 - against the seed engine (``serve.reference.ReferenceEngine``, batch-1
   sequential prefill) on identical traffic — the speedup column;
-- against the analytic decode roofline (``core.roofline.decode_bound``)
-  at the same batch/context — the fraction-of-bound column;
-- across page sizes — paging's constant-traffic claim (the all2all-cache
-  analogue: per-slot KV traffic rounds to pages, so smaller pages hug the
-  true context length).
+- **ragged vs chunked** — the same traffic through the single-program
+  ragged token-budget engine and the PR 1 two-phase engine
+  (``ragged=False``), the serving analogue of one-configuration-for-all
+  (Nproc × Nthread) vs per-point retuning;
+- against the analytic mixed roofline (``core.roofline.mixed_bound``) at
+  the tick's decode/prefill blend — the fraction-of-bound column;
+- **p50 decode latency under concurrent prefill** — a chat+document
+  workload in which long prompts stream through the slots while short chats
+  decode; the two-phase engine stalls every decoder for the length of each
+  prefill burst, the ragged engine packs decode tokens into every tick.
 
   PYTHONPATH=src python benchmarks/serve_sweep.py [--arch qwen2-1.5b]
       [--users 4 16] [--page-sizes 8 32] [--max-tokens 8] [--no-baseline]
+      [--smoke] [--json BENCH_serve.json]
 
-CSV: name,tokens_per_s,derived  (derived = ×-over-seed or %-of-bound)
+CSV: name,tokens_per_s,derived  (derived = ×-over-seed / ×-over-chunked /
+%-of-bound / latency ratio).  ``--json`` additionally writes the rows +
+latency results machine-readably (the perf trajectory lives in
+BENCH_serve.json at the repo root).
 """
 import argparse
+import json
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.roofline import decode_bound
+from repro.core.roofline import mixed_bound
 from repro.models import model as M
 from repro.serve.engine import ServeEngine
 from repro.serve.reference import ReferenceEngine
@@ -55,6 +64,56 @@ def _run(engine, prompts, max_tokens: int):
     return n_tok / dt, results
 
 
+def _decode_gap_p50_ms(eng) -> float:
+    """p50 wall-time gap between consecutive tokens of one request, counting
+    only gaps that span >= 1 tick with outstanding prefill work (decode
+    latency UNDER CONCURRENT PREFILL — the head-of-line metric)."""
+    last = {}
+    gaps = []
+    for uid, tick, t in eng.token_log:
+        if uid in last:
+            t0, tick0 = last[uid]
+            if any(hp for hp, _ in eng.tick_log[tick0 + 1:tick + 1]):
+                gaps.append(t - t0)
+        last[uid] = (t, tick)
+    return float(np.median(gaps) * 1e3) if gaps else float("nan")
+
+
+def latency_scenario(cfg, params, *, cache_len: int, warm: bool = True):
+    """Chat + document stream: 2 short chats decode continuously while long
+    prompts churn through the other slots.  Returns per-engine p50 decode
+    latency (ms) under concurrent prefill, plus tokens/s on the workload."""
+    chat_len, chat_toks = 8, 24
+    doc_len, doc_toks, n_docs = int(cache_len * 0.85), 2, 6
+    rng = np.random.RandomState(11)
+    chats = [rng.randint(0, cfg.vocab_size, chat_len) for _ in range(2)]
+    docs = [rng.randint(0, cfg.vocab_size, doc_len) for _ in range(n_docs)]
+
+    out = {}
+    for mode in ("chunked", "ragged"):
+        def make():
+            return ServeEngine(params, cfg, batch_size=4, cache_len=cache_len,
+                               page_size=16, prefill_chunk=32,
+                               token_budget=128, ragged=(mode == "ragged"))
+
+        def drive(eng):
+            uids = ([eng.submit(p, max_tokens=chat_toks) for p in chats]
+                    + [eng.submit(p, max_tokens=doc_toks) for p in docs])
+            t0 = time.perf_counter()
+            results = eng.run()
+            dt = time.perf_counter() - t0
+            return sum(len(results[u]) for u in uids) / dt
+
+        if warm:
+            drive(make())
+        eng = make()
+        tps = drive(eng)
+        out[mode] = {"p50_decode_ms_under_prefill": _decode_gap_p50_ms(eng),
+                     "tokens_per_s": tps,
+                     "ticks": eng.stats["ticks"]}
+    return out
+
+
 def sweep(arch: str, users, page_sizes, max_tokens: int, cache_len: int,
           baseline: bool = True, warm: bool = True):
     cfg = get_config(arch, smoke=True)
@@ -72,19 +131,44 @@ def sweep(arch: str, users, page_sizes, max_tokens: int, cache_len: int,
             ref_tps, _ = _run(ref, prompts, max_tokens)
             rows.append((f"serve/{arch}/seed/users={n_users}", ref_tps, ""))
         for ps in page_sizes:
-            bound = decode_bound(cfg, batch, cache_len,
-                                 page_size=ps)["tokens_per_s"]
-            eng = ServeEngine(params, cfg, batch_size=batch,
-                              cache_len=cache_len, page_size=ps,
-                              prefill_chunk=32)
-            if warm:  # compile outside the timed run (steady-state tokens/s)
-                _run(eng, prompts, max_tokens)
-            tps, _ = _run(eng, prompts, max_tokens)
-            derived = (f"{tps / ref_tps:.1f}x-over-seed" if ref_tps
-                       else f"{tps / bound:.2e}-of-bound")
-            rows.append((
-                f"serve/{arch}/paged/users={n_users}/page={ps}", tps, derived))
-    return rows
+            mean_ctx = int(np.mean([len(p) for p in prompts]) + max_tokens)
+            # the bound's blend mirrors what the engine can actually pack in
+            # one tick: batch decode tokens + prefill up to the 128 budget
+            bound = mixed_bound(cfg, n_decode=batch,
+                                n_prefill=min(32 * batch, 128 - batch),
+                                context_len=mean_ctx,
+                                page_size=ps)["tokens_per_s"]
+            tps = {}
+            for mode in ("chunked", "ragged"):
+                eng_kw = dict(batch_size=batch, cache_len=cache_len,
+                              page_size=ps, prefill_chunk=32,
+                              token_budget=128, ragged=(mode == "ragged"))
+                if warm:  # compile outside the timed run
+                    _run(ServeEngine(params, cfg, **eng_kw), prompts,
+                         max_tokens)
+                tps[mode], _ = _run(ServeEngine(params, cfg, **eng_kw),
+                                    prompts, max_tokens)
+            derived = (f"{tps['chunked'] / ref_tps:.1f}x-over-seed"
+                       if ref_tps else "")
+            rows.append((f"serve/{arch}/chunked/users={n_users}/page={ps}",
+                         tps["chunked"], derived))
+            derived = f"{tps['ragged'] / tps['chunked']:.2f}x-over-chunked"
+            if ref_tps:
+                derived += f",{tps['ragged'] / ref_tps:.1f}x-over-seed"
+            derived += f",{tps['ragged'] / bound:.2e}-of-bound"
+            rows.append((f"serve/{arch}/ragged/users={n_users}/page={ps}",
+                         tps["ragged"], derived))
+    lat = latency_scenario(cfg, params, cache_len=max(cache_len, 256),
+                           warm=warm)
+    for mode in ("chunked", "ragged"):
+        rows.append((f"serve/{arch}/latency/{mode}",
+                     lat[mode]["tokens_per_s"],
+                     f"p50_decode_ms={lat[mode]['p50_decode_ms_under_prefill']:.1f}"))
+    ratio = (lat["chunked"]["p50_decode_ms_under_prefill"]
+             / lat["ragged"]["p50_decode_ms_under_prefill"])
+    rows.append((f"serve/{arch}/latency/p50-improvement", ratio,
+                 "x-lower-p50-decode-under-prefill"))
+    return rows, lat
 
 
 def main(argv=None):
@@ -97,13 +181,32 @@ def main(argv=None):
     ap.add_argument("--no-baseline", action="store_true")
     ap.add_argument("--cold", action="store_true",
                     help="include compile time in the measurement")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI grid (one user count, one page size)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + latency results as JSON")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.users, args.page_sizes, args.max_tokens = [4], [8], 4
+    rows, lat = sweep(args.arch, args.users, args.page_sizes,
+                      args.max_tokens, args.cache_len,
+                      baseline=not args.no_baseline, warm=not args.cold)
     print("name,tokens_per_s,derived")
-    for name, tps, derived in sweep(args.arch, args.users, args.page_sizes,
-                                    args.max_tokens, args.cache_len,
-                                    baseline=not args.no_baseline,
-                                    warm=not args.cold):
+    for name, tps, derived in rows:
         print(f"{name},{tps:.1f},{derived}", flush=True)
+    if args.json:
+        payload = {
+            "arch": args.arch,
+            "grid": {"users": args.users, "page_sizes": args.page_sizes,
+                     "max_tokens": args.max_tokens,
+                     "cache_len": args.cache_len},
+            "rows": [{"name": n, "tokens_per_s": t, "derived": d}
+                     for n, t, d in rows],
+            "latency_under_concurrent_prefill": lat,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
 
 
 if __name__ == "__main__":

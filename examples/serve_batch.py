@@ -1,5 +1,6 @@
-"""Serve mixed-length batched requests through the paged continuous-batching
-engine (chunked batched prefill + paged KV slots + FIFO admission).
+"""Serve mixed-length batched requests through the ragged token-budget
+engine (one compiled program for any prefill/decode mix + paged KV slots +
+FIFO admission).
 
   PYTHONPATH=src python examples/serve_batch.py
 """

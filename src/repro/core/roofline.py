@@ -133,6 +133,72 @@ def decode_bound(cfg, batch: int, context_len: int, hw: HwSpec = V5E,
     }
 
 
+def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
+                hw: HwSpec = V5E, page_size: int = None) -> Dict:
+    """Analytic bound for ONE ragged tick — the decode/prefill roofline blend.
+
+    Scores a pack of ``n_decode`` decode tokens + ``n_prefill`` prefill-chunk
+    tokens against the hardware roofline.  The active parameters are swept
+    ONCE per tick regardless of the mix — that is the ragged engine's
+    structural win: the two-phase engine serves the same mix with a prefill
+    tick AND a decode tick, paying the parameter sweep (the memory-bound
+    term that dominates small-batch serving) twice.  Decode tokens read
+    their slot's full live KV (page-rounded, like ``decode_bound``); prefill
+    tokens attend over ~half the context on average and add their own KV
+    writes.
+
+    Returns per-tick terms, ``tokens_per_s`` for the whole pack, and
+    ``speedup_vs_two_phase`` — the bound-level ratio against running the
+    same tokens as separate prefill + decode programs.  The serve sweep
+    reports measured ragged throughput against this bound.
+    """
+    n_act = active_param_count(cfg)
+    param_bytes = n_act * (2 if cfg.param_dtype == "bfloat16" else 4)
+    act_bytes = 2 if cfg.dtype == "bfloat16" else 4
+    total = n_decode + n_prefill
+
+    def _tick(n_dec, n_pre):
+        toks = n_dec + n_pre
+        flops = 2.0 * n_act * toks
+        kv_read = kv_write = 0.0
+        for st in cfg.stages:
+            for blk in st.pattern:
+                if blk.mixer not in ("attn", "cross_attn") or blk.attn is None:
+                    continue
+                a = blk.attn
+                t_eff = (context_len if a.window is None
+                         else min(a.window, context_len))
+                if page_size and a.window is None:
+                    t_eff = -(-t_eff // page_size) * page_size
+                # decode tokens see the whole context; prefill tokens see
+                # ~half of it on average (causal positions 0..ctx)
+                q_ctx = n_dec * t_eff + n_pre * t_eff / 2.0
+                flops += st.repeats * 4.0 * q_ctx * a.num_heads * a.head_dim
+                kv_read += (st.repeats * 2.0 * q_ctx * a.num_kv_heads
+                            * a.head_dim * act_bytes)
+                kv_write += (st.repeats * 2.0 * toks * a.num_kv_heads
+                             * a.head_dim * act_bytes)
+        t_comp = flops / hw.peak_flops
+        t_mem = (param_bytes + kv_read + kv_write) / hw.hbm_bw
+        return t_comp, t_mem, max(t_comp, t_mem, 1e-30)
+
+    t_comp, t_mem, t = _tick(n_decode, n_prefill)
+    # two-phase floor: the same tokens as a decode-only tick plus a
+    # prefill-only tick, each paying its own parameter sweep
+    _, _, t_dec = _tick(n_decode, 0)
+    _, _, t_pre = _tick(0, n_prefill)
+    two_phase = ((t_dec if n_decode else 0.0) + (t_pre if n_prefill else 0.0)
+                 or 1e-30)
+    return {
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "dominant": "compute" if t_comp >= t_mem else "memory",
+        "tick_s": t,
+        "tokens_per_s": total / t if total else 0.0,
+        "speedup_vs_two_phase": two_phase / t,
+    }
+
+
 def format_row(result: Dict, terms: Dict) -> str:
     return (f"| {result['arch']} | {result['shape']} | {result['mesh']} "
             f"| {terms['compute_s']:.3e} | {terms['memory_s']:.3e} "

@@ -159,6 +159,102 @@ def paged_flash_decode(q, kp, vp, ptab, lens, *, interpret: bool = True):
     )(ptab, lens, q, kp, vp)
 
 
+# ---------------------------------------------------------------------------
+# Ragged paged flash (serving): attention for a flat pack of T query tokens
+# from arbitrary slots — the kernel-level half of the engine's single ragged
+# program.  Each pack token carries its own slot index and visible length, so
+# prefill-chunk tokens and decode tokens run through the same grid; the slot
+# index rides in as scalar prefetch and resolves the per-token block-table
+# row in the BlockSpec index_map (a double indirection: token -> slot ->
+# page -> pool row), before each grid step's DMA.  Grid = (T, kvH, pps),
+# pages innermost (sequential online-softmax state in VMEM).
+
+
+def _ragged_decode_kernel(slot_ref, lens_ref, ptab_ref, q_ref, k_ref, v_ref,
+                          o_ref, m_ref, l_ref, acc_ref, *, page: int,
+                          npages: int, scale: float):
+    t, ji = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # visible entries of this page for this token: positions 0..lens-1 are
+    # contiguous per slot, so the causal mask is just a length cutoff —
+    # intra-pack keys written at positions beyond this token stay invisible
+    n_valid = lens_ref[t] - ji * page
+
+    @pl.when(n_valid > 0)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)  # (page, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, page)
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < n_valid, s, NEG_INF)
+
+        m_prev = m_ref[...]  # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(cols < n_valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * corr
+                        + jax.lax.dot(p, v_ref[0, :, 0].astype(jnp.float32)))
+        m_ref[...] = m_new
+
+    @pl.when(ji == pl.num_programs(2) - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ragged_paged_flash(q, kp, vp, ptab, slot, lens, *, interpret: bool = True):
+    """Ragged-pack attention over a paged KV pool (one serving tick).
+
+    q: (T, kvH, G, hd) — T pack tokens from arbitrary slots; slot: (T,)
+    int32 per-token slot index; lens: (T,) int32 visible entries for each
+    token (``q_pos + 1``; 0 = invalid token, output is zeros);
+    kp, vp: (n_pages, page, kvH, hd); ptab: (B, pps) int32 block table.
+    Returns (T, kvH, G, hd).  Full (non-windowed) causal layers only.
+    """
+    T, kvH, G, hd = q.shape
+    npages, page = kp.shape[0], kp.shape[1]
+    pps = ptab.shape[1]
+    scale = hd ** -0.5
+
+    def _page_idx(t, h, j, slot_ref, lens_ref, ptab_ref):
+        # token -> slot -> page -> pool row; unmapped sentinel pages clamp
+        # to a real row whose entries are dead via the lens cutoff
+        return (jnp.minimum(ptab_ref[slot_ref[t], j], npages - 1), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(T, kvH, pps),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda t, h, j, sl, ln, pt: (t, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd), _page_idx),
+            pl.BlockSpec((1, page, 1, hd), _page_idx),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda t, h, j, sl, ln, pt: (t, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_decode_kernel, page=page, npages=npages,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, kvH, G, hd), q.dtype),
+        interpret=interpret,
+    )(slot, lens, ptab, q, kp, vp)
+
+
 @functools.partial(jax.jit, static_argnames=("bq", "bk", "window", "interpret"))
 def flash_attention(q, k, v, *, bq: int = 128, bk: int = 128, window=None,
                     interpret: bool = True):

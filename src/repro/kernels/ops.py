@@ -36,6 +36,14 @@ def paged_flash_decode(q, kp, vp, ptab, lens):
                                   interpret=_interpret())
 
 
+def ragged_paged_flash(q, kp, vp, ptab, slot, lens):
+    """Ragged-pack serving attention over a block-table-paged KV pool.
+    q: (T,kvH,G,hd); slot/lens: (T,); kp/vp: (n_pages,page,kvH,hd)
+    -> (T,kvH,G,hd)."""
+    return _fa.ragged_paged_flash(q, kp, vp, ptab, slot, lens,
+                                  interpret=_interpret())
+
+
 def _flash_grouped_local(q, k, v, window):
     """Single-shard grouped-layout kernel call.
     q: (B,S,kvH,G,hd); k,v: (B,S,kvH,hd) -> (B,S,kvH,G,hd)."""

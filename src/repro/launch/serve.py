@@ -1,5 +1,6 @@
-"""Serving launcher: batched requests through the paged continuous-batching
-engine (``--engine reference`` runs the seed lock-step engine for A/B).
+"""Serving launcher: batched requests through the ragged token-budget
+engine (``--engine chunked`` runs the PR 1 two-phase paged engine,
+``--engine reference`` the seed lock-step engine, for A/B).
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --requests 12
 """
@@ -17,8 +18,8 @@ from repro.serve.reference import ReferenceEngine
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_NAMES, default="qwen2-1.5b")
-    ap.add_argument("--engine", choices=("paged", "reference"),
-                    default="paged")
+    ap.add_argument("--engine", choices=("ragged", "chunked", "reference"),
+                    default="ragged")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=12)
@@ -27,6 +28,13 @@ def main(argv=None):
     ap.add_argument("--max-pages", type=int, default=None,
                     help="physical page-pool budget (default: full)")
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--token-budget", type=int, default=128,
+                    help="tokens per ragged tick (prefill + decode blend)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples with --top-k/--seed")
+    ap.add_argument("--top-k", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="per-request sampling seed base")
     ap.add_argument("--flash-decode", action="store_true",
                     help="route global-layer decode through the Pallas "
                          "paged kernel")
@@ -45,15 +53,22 @@ def main(argv=None):
                              cache_len=cache_len, page_size=args.page_size,
                              max_pages=args.max_pages,
                              prefill_chunk=args.prefill_chunk,
+                             token_budget=args.token_budget,
+                             ragged=args.engine == "ragged",
                              flash_decode=args.flash_decode)
     rng = np.random.RandomState(0)
+    sample_kw = {}
+    if args.engine != "reference" and args.temperature > 0:
+        sample_kw = dict(temperature=args.temperature, top_k=args.top_k)
     uids = [engine.submit(rng.randint(0, cfg.vocab_size, args.prompt_len),
-                          max_tokens=args.max_tokens)
-            for _ in range(args.requests)]
+                          max_tokens=args.max_tokens,
+                          **(dict(sample_kw, seed=(args.seed or 0) + i)
+                             if sample_kw else {}))
+            for i in range(args.requests)]
     results = engine.run()
     for uid in uids:
         print(f"req {uid:3d}: {results[uid]}")
-    if args.engine == "paged":
+    if args.engine != "reference":
         print(f"stats: {engine.stats}")
     return 0
 

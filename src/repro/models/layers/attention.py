@@ -315,6 +315,84 @@ def paged_attention_step(params, cfg: AttnCfg, x, cache, q_pos, valid, *,
     return _out_proj(params, cfg, o), cache
 
 
+def ragged_attention_step(params, cfg: AttnCfg, x, cache, slot, q_pos, valid,
+                          *, flash_decode: bool = False):
+    """One ragged serving step: a flat pack of T tokens from arbitrary slots.
+
+    x: (1, T, D) hidden pack; slot/q_pos/valid: (T,) per-token slot index,
+    absolute position, and validity.  Any mix of prefill-chunk tokens and
+    decode tokens rides in one pack — the cache write and the per-token
+    causal mask (``kpos <= q_pos``) make intra-pack causality fall out of the
+    same machinery as cross-tick causality, so a prefill chunk and the decode
+    tokens of other slots coexist in a single program.  Invalid tokens
+    scatter nowhere and their outputs are garbage the engine never reads.
+    """
+    T = x.shape[1]
+    q = _project_q(params, cfg, x)[0]  # (T,kvH,G,hd)
+    k_new, v_new = (t[0] for t in _project_kv(params, cfg, x))  # (T,kvH,hd)
+    if cfg.rope_theta is not None:
+        q = apply_rope(q[None], q_pos[None], cfg.rope_theta)[0]
+        k_new = apply_rope(k_new[None], q_pos[None], cfg.rope_theta)[0]
+
+    paged = "kp" in cache
+    cache = dict(cache)
+    B = cache["slen"].shape[0]
+    if paged:
+        P = cache["kp"].shape[1]
+        n_pages = cache["kp"].shape[0]
+        pps = cache["ptab"].shape[-1]
+        page_slot = jnp.clip(q_pos // P, 0, pps - 1)
+        page = cache["ptab"][slot, page_slot]  # (T,)
+        page = jnp.where(valid, page, n_pages)  # OOB -> scatter dropped
+        off = q_pos % P
+        cache["kp"] = cache["kp"].at[page, off].set(k_new, mode="drop")
+        cache["vp"] = cache["vp"].at[page, off].set(v_new, mode="drop")
+        Tc = pps * P
+        idx = jnp.where(valid, q_pos, Tc)
+    else:
+        cap = cache["k"].shape[1]
+        # a slot's pack tokens are contiguous positions: when they exceed
+        # ``cap`` the circular buffer wraps within one scatter, so keep only
+        # the last ``cap`` writes per slot (duplicate scatter indices have
+        # unspecified order).  row_max is a per-slot segment max.
+        row_max = jnp.full((B,), -1, jnp.int32).at[slot].max(
+            jnp.where(valid, q_pos, -1), mode="drop")
+        keep = valid & (q_pos > row_max[slot] - cap)
+        idx = jnp.where(keep, q_pos % cap, cap)
+        cache["k"] = cache["k"].at[slot, idx].set(k_new, mode="drop")
+        cache["v"] = cache["v"].at[slot, idx].set(v_new, mode="drop")
+        Tc = cap
+    cache["kpos"] = cache["kpos"].at[slot, idx].set(q_pos, mode="drop")
+    cache["slen"] = cache["slen"].at[slot].max(
+        jnp.where(valid, q_pos + 1, 0), mode="drop")
+
+    if paged and flash_decode:
+        from repro.kernels import ops as kops
+
+        lens = jnp.where(valid, q_pos + 1, 0).astype(jnp.int32)
+        o = kops.ragged_paged_flash(q, cache["kp"], cache["vp"],
+                                    cache["ptab"], slot, lens)[None]
+        return _out_proj(params, cfg, o), cache
+
+    if paged:
+        k_all = jnp.take(cache["kp"], cache["ptab"], axis=0, mode="clip")
+        v_all = jnp.take(cache["vp"], cache["ptab"], axis=0, mode="clip")
+        kvH, hd = cfg.num_kv_heads, cfg.head_dim
+        k_all = k_all.reshape(B, Tc, kvH, hd)
+        v_all = v_all.reshape(B, Tc, kvH, hd)
+    else:
+        k_all, v_all = cache["k"], cache["v"]
+    # gather each token's slot context and run T single-query attentions:
+    # _paged_masked_attn with the pack as the batch axis and C == 1
+    k_tok = k_all[slot]  # (T,Tc,kvH,hd)
+    v_tok = v_all[slot]
+    kpos_tok = cache["kpos"][slot]  # (T,Tc)
+    o = _paged_masked_attn(q[:, None], k_tok, v_tok, kpos_tok,
+                           q_pos[:, None], cfg.window)  # (T,1,kvH,G,hd)
+    o = jnp.moveaxis(o, 1, 0)  # (1,T,kvH,G,hd)
+    return _out_proj(params, cfg, o), cache
+
+
 def attention_decode(params, cfg: AttnCfg, x, cache, *, sp_decode: bool = False):
     """x: (B,1,D). Returns (out (B,1,D), new_cache)."""
     B = x.shape[0]

@@ -190,6 +190,43 @@ def paged_step(params, cfg: ModelCfg, state, tokens, q_pos, valid, *,
     return logits, new_state
 
 
+def ragged_step(params, cfg: ModelCfg, state, tokens, slot, q_pos, seq_idx,
+                valid, logit_idx, *, width: int,
+                flash_decode: bool = False):
+    """One ragged token-budget step: T tokens from any mix of slots/phases.
+
+    The single compiled program of the ragged serving engine.  tokens /
+    slot / q_pos / seq_idx / valid are flat (T,) vectors — each entry is one
+    token of one slot at one absolute position (seq_idx is its intra-slot
+    ordinal within the pack, for the recurrent repack; the scheduler packs at
+    most ``width`` tokens per slot, in position order).  Prefill chunks and
+    decode tokens are indistinguishable at this level; causality between
+    them falls out of the per-token position masks.
+
+    logit_idx: (B,) index into the pack of each slot's sampled token (T ==
+    no sample this tick; those rows return garbage logits the engine
+    ignores).  Returns (logits (B, V), new state).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    x = emb.embed_tokens(params["embed"], tokens[None], dt)  # (1,T,D)
+    if cfg.abs_pos == "sinusoidal":
+        x = x + emb.sinusoidal_at(q_pos, cfg.d_model, dt)
+    new_layers = []
+    for st, sp, ss in zip(cfg.stages, params["stages"], state["layers"]):
+        x, ns = tfm.stage_step_ragged(sp, cfg, st, x, ss, slot, q_pos,
+                                      seq_idx, valid, width=width,
+                                      flash_decode=flash_decode)
+        new_layers.append(ns)
+    # gather only the sampled tokens before the LM head: the pack is T wide
+    # but at most B slots sample per tick, so the head runs at (B, V)
+    sel = jnp.take(x[0], jnp.minimum(logit_idx, x.shape[1] - 1), axis=0)
+    sel = rmsnorm(params["final_norm"], sel[:, None, :], cfg.norm_eps)
+    tied = params["embed"]["tok_embed"] if cfg.tie_embeddings else None
+    logits = emb.logits_from_hidden(params.get("head", {}), sel,
+                                    tied_embed=tied)
+    return logits[:, 0], {"layers": new_layers}
+
+
 def reset_paged_slots(cfg: ModelCfg, state, init_state, mask, ptab_rows) -> Dict:
     """Admission/eviction: for slots where ``mask`` is set, install the
     host-allocated block-table rows and restore all other per-row state from

@@ -327,6 +327,87 @@ def stage_step_paged(params, cfg: ModelCfg, stage: Stage, x, states, q_pos,
     return x, list(new_states)
 
 
+def _ragged_recurrent_roll(dec, p, c, h, s, slot, seq_idx, valid, width: int):
+    """Ragged pack -> per-slot dense -> masked roll -> scatter back.
+
+    Recurrent mixers must consume a slot's tokens in position order, but the
+    pack interleaves slots.  The scheduler guarantees (a) at most ``width``
+    tokens per slot per pack and (b) in-pack position order, so a scatter by
+    (slot, intra-slot ordinal) into a dense (B, width) layout makes the
+    existing masked roll apply unchanged; outputs gather back by the same
+    indices.  h: (1,T,D); slot/seq_idx/valid: (T,).
+    """
+    B = next(iter(jax.tree.leaves(s))).shape[0]
+    h0 = h[0]  # (T,D)
+    col = jnp.where(valid, seq_idx, width)
+    dense = jnp.zeros((B, width, h0.shape[-1]), h0.dtype)
+    dense = dense.at[slot, col].set(h0, mode="drop")
+    vdense = jnp.zeros((B, width), bool).at[slot, col].set(valid, mode="drop")
+    y_dense, s = _masked_recurrent_roll(dec, p, c, dense, s, vdense)
+    y = y_dense[slot, jnp.minimum(col, width - 1)]  # (T,D); invalid rows junk
+    return y[None], s
+
+
+def block_step_ragged(params, cfg: ModelCfg, blk: BlockCfg, x, state, slot,
+                      q_pos, seq_idx, valid, *, width: int,
+                      flash_decode: bool = False):
+    h = rmsnorm(params["mixer_norm"], x, cfg.norm_eps)
+    if blk.mixer == "attn":
+        m, state = attn.ragged_attention_step(params["mixer"], blk.attn, h,
+                                              state, slot, q_pos, valid,
+                                              flash_decode=flash_decode)
+    elif blk.mixer == "mamba":
+        m, state = _ragged_recurrent_roll(
+            mamba_lib.mamba_decode, params["mixer"], blk.mamba, h, state,
+            slot, seq_idx, valid, width)
+    elif blk.mixer == "mlstm":
+        m, state = _ragged_recurrent_roll(
+            xlstm_lib.mlstm_decode, params["mixer"], blk.xlstm, h, state,
+            slot, seq_idx, valid, width)
+    elif blk.mixer == "slstm":
+        m, state = _ragged_recurrent_roll(
+            xlstm_lib.slstm_decode, params["mixer"], blk.xlstm, h, state,
+            slot, seq_idx, valid, width)
+    else:
+        raise NotImplementedError(f"ragged serving: unsupported mixer {blk.mixer}")
+    x = x + m
+    if blk.ffn is not None:
+        h = rmsnorm(params["ffn_norm"], x, cfg.norm_eps)
+        if blk.ffn == "mlp":
+            f = mlp_fwd(params["ffn"], blk.mlp, h)
+        else:
+            f, _ = moe_fwd(params["ffn"], blk.moe, h)
+        x = x + f
+    return x, state
+
+
+def stage_step_ragged(params, cfg: ModelCfg, stage: Stage, x, states, slot,
+                      q_pos, seq_idx, valid, *, width: int,
+                      flash_decode: bool = False):
+    if stage.repeats == 1:
+        new_states = []
+        for i, blk in enumerate(stage.pattern):
+            x, s = block_step_ragged(params[i], cfg, blk, x, states[i], slot,
+                                     q_pos, seq_idx, valid, width=width,
+                                     flash_decode=flash_decode)
+            new_states.append(s)
+        return x, new_states
+
+    def body(x, xs):
+        group_params, group_states = xs
+        new_states = []
+        for i, blk in enumerate(stage.pattern):
+            x, s = block_step_ragged(group_params[i], cfg, blk, x,
+                                     group_states[i], slot, q_pos, seq_idx,
+                                     valid, width=width,
+                                     flash_decode=flash_decode)
+            new_states.append(s)
+        return x, tuple(new_states)
+
+    x, new_states = jax.lax.scan(body, x, (tuple(params), tuple(states)))
+    return x, list(new_states)
+
+
 def reset_stage_slots(stage: Stage, states, init_states, mask, ptab_rows):
     """Reset per-slot rows (admission): install ``ptab_rows`` into block
     tables, restore every other per-row leaf from the fresh-init template.

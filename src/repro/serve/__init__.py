@@ -1,3 +1,4 @@
-from repro.serve.serve_step import make_serve_step, decode_state_specs  # noqa: F401
+from repro.serve.serve_step import (make_ragged_step, make_serve_step,  # noqa: F401
+                                    decode_state_specs)
 from repro.serve.engine import ServeEngine  # noqa: F401
 from repro.serve.reference import ReferenceEngine, Request  # noqa: F401

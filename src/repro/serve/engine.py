@@ -1,34 +1,50 @@
-"""Scalable serving engine: chunked batched prefill + paged KV slots.
+"""Ragged token-budget serving engine: one compiled program for any traffic.
 
-The paper's serving-time analogue of the Nproc×Nthread sweep needs one
-engine that stays near peak across any mix of concurrent users and prompt
-lengths.  The seed engine (now ``reference.ReferenceEngine``) could not
-express that: batch-1 prefills (one compile per prompt length), lock-step
-positions, and per-slot ``cache_len`` KV.  This engine replaces all three:
+The paper's core result is that ONE set of system settings keeps every
+(Nproc × Nthread) factorization near practical peak.  The serving analogue:
+one compiled program that stays near the roofline for any mix of prefilling
+and decoding requests.  PR 1 got to two programs — a ``(B, chunk)`` prefill
+and a ``(B, 1)`` decode — but a tick was either one or the other, so every
+prefill chunk stalled every decoding slot (head-of-line interference, the
+exact failure mode the paper's single-configuration discipline eliminates).
 
-- **Chunked, batched prefill** — every slot with outstanding prompt tokens
-  advances by one fixed-size chunk per prefill tick, all slots in a single
-  jit'd ``(B, chunk)`` call with per-slot positions and validity masks.
-  Prompts are padded to chunk multiples; long prompts span several ticks, so
-  prefill work interleaves with decode instead of stalling the whole pool.
-  Exactly two programs are ever compiled — ``(B, chunk)`` prefill and
-  ``(B, 1)`` decode — independent of traffic.
-- **Paged KV slots** — global-attention KV lives in a page pool indexed by
-  per-slot block tables (``models.layers.attention.init_paged_cache``).  A
-  request pins only ``ceil((len + max_tokens) / page_size)`` pages, reserved
-  at admission (no mid-flight OOM), so the engine admits ``batch_size``
-  slots against a smaller physical budget and queues FIFO when the pool is
-  exhausted.  Windowed layers keep per-slot circular buffers (bounded KV).
-- **Host/device split** — the page allocator and block tables are host-side
-  numpy (the vLLM control-plane split); the device only ever sees dense
-  arrays, so the whole state remains a shardable pytree.
+This engine collapses the two-phase tick into a single jit'd **ragged
+step** (``serve_step.make_ragged_step`` / ``models.model.ragged_step``):
 
-Greedy decode is token-identical to the reference engine on equal-length
-waves, and to a solo batch-1 run on any mix (tests/test_serve.py).
+- **Token-budget packs** — each tick, a host-side scheduler packs a fixed
+  token budget ``T`` (``token_budget``, default 128) with a mix of prefill
+  chunks and decode tokens from whichever slots have work.  Decode tokens
+  pack first — a decoding slot emits one token EVERY tick, regardless of
+  concurrent prefill — and prefill chunks (≤ ``prefill_chunk`` tokens per
+  slot) fill the leftover budget.  A slot that finishes its prompt inside a
+  pack appends its first decode token to the same pack (one fewer tick to
+  first token).
+- **Per-token (slot, position, validity) vectors** drive the one
+  ``(T,)``-shaped program: attention scatters KV into the same page pools /
+  circular buffers as before, recurrent mixers repack into per-slot dense
+  order, and logits are gathered only at each slot's last packed token.
+  ``prefill_chunk`` and ``token_budget`` are compile-time shapes; the
+  prefill/decode mix is pure data, so exactly ONE program is ever traced
+  (``stats["traces"]``; the admission reset is a separate control-plane
+  program, not part of the serve path).
+- **Paged KV slots** — unchanged from PR 1: global-attention KV lives in
+  page pools behind per-slot block tables, pages are reserved FIFO at
+  admission and freed at completion; windowed layers keep per-slot circular
+  buffers; the allocator and block tables are host-side numpy.
+- **Seeded sampling** — per-request ``temperature`` / ``top_k`` / ``seed``
+  (greedy argmax remains the default and is token-identical to
+  ``reference.ReferenceEngine``).  Sampling runs host-side from the per-slot
+  logits row with one RNG draw per token, so sampled outputs are identical
+  across (budget, chunk, page) packings too.
+
+The PR 1 two-phase path is kept behind ``ragged=False`` for A/B — the
+``benchmarks/serve_sweep.py`` ragged-vs-chunked column and the p50
+decode-latency-under-prefill comparison run both.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -38,6 +54,7 @@ import numpy as np
 from repro.configs.base import ModelCfg
 from repro.models import model as M
 from repro.serve.reference import Request
+from repro.serve.serve_step import make_ragged_step
 
 
 @dataclasses.dataclass
@@ -53,15 +70,21 @@ class ServeEngine:
     def __init__(self, params, cfg: ModelCfg, *, batch_size: int = 4,
                  cache_len: int = 256, page_size: int = 16,
                  max_pages: Optional[int] = None, prefill_chunk: int = 32,
-                 greedy: bool = True, flash_decode: bool = False):
-        if not greedy:
-            raise NotImplementedError("sampling: greedy only for now")
+                 token_budget: int = 128, greedy: bool = True,
+                 ragged: bool = True, flash_decode: bool = False):
         self.params = params
         self.cfg = cfg
         self.B = batch_size
         self.cache_len = cache_len
         self.page_size = page_size
         self.chunk = prefill_chunk
+        self.budget = token_budget
+        self.greedy = greedy
+        self.ragged = ragged
+        if ragged and token_budget < batch_size:
+            raise ValueError(
+                f"token_budget={token_budget} < batch_size={batch_size}: "
+                "every decoding slot needs one pack entry per tick")
         self.pps = -(-cache_len // page_size)  # block-table width
         self._has_paged = any(
             blk.mixer == "attn" and blk.attn.window is None
@@ -72,12 +95,29 @@ class ServeEngine:
         self.queue: deque = deque()
         self.slots: List[Optional[_Slot]] = [None] * batch_size
         self._uid = 0
+        self._rngs: Dict[int, np.random.Generator] = {}
         self.completion_order: List[int] = []
-        self.stats = {"chunk_ticks": 0, "decode_ticks": 0, "ticks": 0,
+        self.stats = {"chunk_ticks": 0, "decode_ticks": 0, "ragged_ticks": 0,
+                      "ticks": 0, "packed_tokens": 0, "traces": 0,
                       "pages_in_use_peak": 0}
+        # per-token / per-tick logs for the latency benchmark:
+        # token_log rows are (uid, tick index, wall time); tick_log rows are
+        # (had outstanding prefill at tick start, wall time at tick end)
+        self.token_log: List[tuple] = []
+        self.tick_log: List[tuple] = []
+
+        def _count_traces(fn):
+            def wrapper(*a):
+                self.stats["traces"] += 1  # python body runs at trace time
+                return fn(*a)
+            return wrapper
 
         # donate the state: the page pools dominate the pytree and must be
         # updated in place, not copied, on every tick of the hot loop
+        self._ragged_step = jax.jit(
+            _count_traces(make_ragged_step(
+                cfg, width=prefill_chunk + 1, flash_decode=flash_decode)),
+            donate_argnums=(1,))
         step = lambda wl: (lambda p, s, t, qp, v: M.paged_step(
             p, cfg, s, t, qp, v, with_logits=wl, flash_decode=flash_decode))
         self._chunk_step = jax.jit(step(False), donate_argnums=(1,))
@@ -86,7 +126,10 @@ class ServeEngine:
             lambda s, s0, m, rows: M.reset_paged_slots(cfg, s, s0, m, rows),
             donate_argnums=(0,))
 
-    def submit(self, prompt, max_tokens: int = 16, eos_id=None) -> int:
+    def submit(self, prompt, max_tokens: int = 16, eos_id=None, *,
+               temperature: Optional[float] = None,
+               top_k: Optional[int] = None,
+               seed: Optional[int] = None) -> int:
         prompt = np.asarray(prompt, np.int32)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -94,13 +137,23 @@ class ServeEngine:
             raise ValueError(
                 f"len(prompt)+max_tokens = {prompt.size + max_tokens} "
                 f"exceeds cache_len={self.cache_len}")
+        if temperature is None:
+            temperature = 0.0 if self.greedy else 1.0
+        if temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {temperature}")
+        if top_k is not None and top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {top_k}")
         self._uid += 1
-        req = Request(self._uid, prompt, max_tokens, eos_id)
+        req = Request(self._uid, prompt, max_tokens, eos_id,
+                      temperature=temperature, top_k=top_k, seed=seed)
         need = self._pages_needed(req)
         if need > self.n_pages:
             raise ValueError(
                 f"request needs {need} pages but the pool has only "
                 f"{self.n_pages} (raise max_pages or shrink the request)")
+        if temperature > 0.0:
+            self._rngs[self._uid] = np.random.default_rng(
+                seed if seed is not None else self._uid)
         self.queue.append(req)
         return self._uid
 
@@ -133,6 +186,110 @@ class ServeEngine:
             state = self._reset(state, self._template, mask, rows)
         return state
 
+    def _sample(self, req: Request, logits_row: np.ndarray) -> int:
+        """One token from a (V,) logits row: greedy argmax at temperature 0,
+        seeded temperature/top-k sampling otherwise (one RNG draw per token,
+        so output is independent of how ticks were packed)."""
+        if req.temperature == 0.0:
+            return int(np.argmax(logits_row))
+        logit = logits_row.astype(np.float64) / req.temperature
+        if req.top_k is not None and req.top_k < logit.size:
+            kth = np.partition(logit, -req.top_k)[-req.top_k]
+            logit = np.where(logit >= kth, logit, -np.inf)
+        logit = logit - logit.max()
+        p = np.exp(logit)
+        p /= p.sum()
+        return int(self._rngs[req.uid].choice(logit.size, p=p))
+
+    def _finish_token(self, b: int, tok: int, results: Dict) -> None:
+        """Book one sampled token for slot ``b``: emit, advance, retire the
+        request (freeing its pages) on EOS / max_tokens."""
+        s = self.slots[b]
+        req = s.req
+        req.out_tokens.append(tok)
+        s.pos += 1
+        self.token_log.append((req.uid, self.stats["ticks"],
+                               time.perf_counter()))
+        if (len(req.out_tokens) >= req.max_tokens
+                or (req.eos_id is not None and tok == req.eos_id)):
+            results[req.uid] = req.out_tokens
+            self.completion_order.append(req.uid)
+            self._free.extend(s.pages)
+            self._rngs.pop(req.uid, None)
+            self.slots[b] = None
+        else:
+            s.last_tok = tok
+
+    # -- ragged path ------------------------------------------------------
+    def _ragged_tick(self, state):
+        """Pack one token budget and run the single ragged program.
+
+        Decode first (no decoding slot ever stalls), then prefill chunks in
+        slot order until the budget runs out; a slot whose prompt completes
+        in this pack appends its first decode token right behind it."""
+        T, W = self.budget, self.chunk + 1
+        tokens = np.zeros(T, np.int32)
+        slot = np.zeros(T, np.int32)
+        q_pos = np.zeros(T, np.int32)
+        seq_idx = np.full(T, W, np.int32)
+        valid = np.zeros(T, bool)
+        logit_idx = np.full(self.B, T, np.int32)
+        n = 0
+        sampling: List[int] = []
+        for b, s in enumerate(self.slots):
+            if s is None or s.fill < len(s.req.prompt):
+                continue
+            tokens[n] = s.last_tok
+            slot[n] = b
+            q_pos[n] = s.pos
+            seq_idx[n] = 0
+            valid[n] = True
+            logit_idx[b] = n
+            sampling.append(b)
+            n += 1
+        for b, s in enumerate(self.slots):
+            if s is None:
+                continue
+            L = len(s.req.prompt)
+            if s.fill >= L or n >= T:
+                continue
+            c = min(self.chunk, L - s.fill, T - n)
+            tokens[n:n + c] = s.req.prompt[s.fill:s.fill + c]
+            slot[n:n + c] = b
+            q_pos[n:n + c] = s.fill + np.arange(c)
+            seq_idx[n:n + c] = np.arange(c)
+            valid[n:n + c] = True
+            n += c
+            s.fill += c
+            if s.fill >= L:
+                # decode resumes from the last prompt token at position L
+                # (same scheme as the reference engine, for token identity)
+                s.pos = L
+                s.last_tok = int(s.req.prompt[-1])
+                if n < T:
+                    tokens[n] = s.last_tok
+                    slot[n] = b
+                    q_pos[n] = s.pos
+                    seq_idx[n] = c
+                    valid[n] = True
+                    logit_idx[b] = n
+                    sampling.append(b)
+                    n += 1
+        results: Dict[int, List[int]] = {}
+        if n == 0:
+            return state, results
+        logits, state = self._ragged_step(self.params, state, tokens, slot,
+                                          q_pos, seq_idx, valid, logit_idx)
+        self.stats["ragged_ticks"] += 1
+        self.stats["packed_tokens"] += n
+        if sampling:
+            rows = np.asarray(logits)  # (B, V)
+            for b in sampling:
+                self._finish_token(b, self._sample(self.slots[b].req,
+                                                   rows[b]), results)
+        return state, results
+
+    # -- legacy two-phase path (PR 1, kept behind ragged=False) -----------
     def _prefill_tick(self, state):
         """Advance every slot with outstanding prompt tokens by one chunk —
         a single batched (B, chunk) call with per-slot positions."""
@@ -152,8 +309,6 @@ class ServeEngine:
             valid[b, :n] = True
             s.fill += n
             if s.fill >= L:
-                # decode resumes from the last prompt token at position L
-                # (same scheme as the reference engine, for token identity)
                 s.pos = L
                 s.last_tok = int(s.req.prompt[-1])
         _, state = self._chunk_step(self.params, state, tokens, q_pos, valid)
@@ -172,24 +327,13 @@ class ServeEngine:
             valid[b, 0] = True
         logits, state = self._decode_step(self.params, state, tokens, q_pos,
                                           valid)
-        nxt = np.asarray(jax.numpy.argmax(logits[:, -1], axis=-1))
+        rows = np.asarray(logits[:, -1])
         self.stats["decode_ticks"] += 1
-        results = {}
+        results: Dict[int, List[int]] = {}
         for b, s in enumerate(self.slots):
             if s is None:
                 continue
-            tok = int(nxt[b])
-            req = s.req
-            req.out_tokens.append(tok)
-            s.pos += 1
-            if (len(req.out_tokens) >= req.max_tokens
-                    or (req.eos_id is not None and tok == req.eos_id)):
-                results[req.uid] = req.out_tokens
-                self.completion_order.append(req.uid)
-                self._free.extend(s.pages)
-                self.slots[b] = None
-            else:
-                s.last_tok = tok
+            self._finish_token(b, self._sample(s.req, rows[b]), results)
         return state, results
 
     def run(self, max_ticks: int = 4096) -> Dict[int, List[int]]:
@@ -197,7 +341,7 @@ class ServeEngine:
         state = M.init_paged_state(self.params, self.cfg, self.B,
                                    self.cache_len, page_size=self.page_size,
                                    n_pages=self.n_pages,
-                                   window_extra=self.chunk - 1)
+                                   window_extra=self.chunk)
         # the reset template must not alias the (donated) live state
         self._template = jax.tree.map(jax.numpy.copy, state)
         results: Dict[int, List[int]] = {}
@@ -205,13 +349,18 @@ class ServeEngine:
             if all(s is None for s in self.slots) and not self.queue:
                 break
             state = self._admit(state)
-            if any(s is not None and s.fill < len(s.req.prompt)
-                   for s in self.slots):
+            had_prefill = any(s is not None and s.fill < len(s.req.prompt)
+                              for s in self.slots)
+            if self.ragged:
+                state, done = self._ragged_tick(state)
+                results.update(done)
+            elif had_prefill:
                 state = self._prefill_tick(state)
             elif any(s is not None for s in self.slots):
                 state, done = self._decode_tick(state)
                 results.update(done)
             self.stats["ticks"] += 1
+            self.tick_log.append((had_prefill, time.perf_counter()))
         # drain partials on tick-budget exhaustion, releasing slots/pages so
         # the engine stays reusable (no page leak, no stale decode state);
         # never-admitted requests report their (empty) partials too, so every
@@ -220,8 +369,10 @@ class ServeEngine:
             if s is not None:
                 results[s.req.uid] = s.req.out_tokens
                 self._free.extend(s.pages)
+                self._rngs.pop(s.req.uid, None)
                 self.slots[b] = None
         while self.queue:
             req = self.queue.popleft()
             results[req.uid] = req.out_tokens
+            self._rngs.pop(req.uid, None)
         return results

@@ -31,6 +31,11 @@ class Request:
     eos_id: Optional[int] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # sampling (serve.engine only; this reference engine is greedy-only):
+    # temperature == 0 -> greedy argmax; seed defaults to uid at submit
+    temperature: float = 0.0
+    top_k: Optional[int] = None
+    seed: Optional[int] = None
 
 
 class ReferenceEngine:

@@ -1,9 +1,23 @@
-"""The jit-compiled serving step (one decode token) + state sharding rules.
+"""The jit-compiled serving steps + state sharding rules.
 
-``STATE_AXES`` names the logical axes of every decode-state leaf — both the
-lock-step cache (k/v/k_pos/pos) and the paged engine's leaves (kp/vp page
-pools, ptab block tables, kpos per-slot positions, slen fill counts) — so
-``decode_state_specs`` can lay either state out on a mesh.
+Two step builders live here:
+
+- ``make_serve_step`` — the legacy lock-step decode step (one token per
+  slot, shared positions; kept for the reference engine path).
+- ``make_ragged_step`` — the serving engine's ONE compiled program: a flat
+  (T,) token pack in which every entry carries its own (slot, position,
+  validity), so any mix of prefill-chunk tokens and decode tokens runs
+  through a single trace.  ``width`` (max tokens any slot contributes to a
+  pack) and ``flash_decode`` are compile-time constants; everything else is
+  data, which is what keeps the program count at exactly one regardless of
+  traffic.
+
+``STATE_AXES`` names the logical axes of every decode-state leaf — the
+lock-step cache (k/v/k_pos/pos) and the ragged/paged engine's leaves (kp/vp
+page pools, ptab block tables, kpos per-slot positions, slen fill counts) —
+so ``decode_state_specs`` can lay either state out on a mesh.  The ragged
+pack's own vectors (tokens/slot/q_pos/seq_idx/valid) are replicated: they
+are (T,)-sized control data, not state.
 """
 from __future__ import annotations
 
@@ -22,6 +36,24 @@ def make_serve_step(cfg: ModelCfg, *, sp_decode: bool = False):
         return M.decode_step(params, cfg, state, tokens_t, sp_decode=sp_decode)
 
     return serve_step
+
+
+def make_ragged_step(cfg: ModelCfg, *, width: int, flash_decode: bool = False):
+    """Build the single ragged serving program (see ``models.model.ragged_step``).
+
+    Returns ``f(params, state, tokens, slot, q_pos, seq_idx, valid,
+    logit_idx) -> (logits (B, V), new_state)`` with all pack vectors (T,)
+    and ``logit_idx`` (B,).  Jit it with ``donate_argnums=(1,)`` — the page
+    pools dominate the state pytree and must be updated in place.
+    """
+
+    def ragged_step(params, state, tokens, slot, q_pos, seq_idx, valid,
+                    logit_idx):
+        return M.ragged_step(params, cfg, state, tokens, slot, q_pos,
+                             seq_idx, valid, logit_idx, width=width,
+                             flash_decode=flash_decode)
+
+    return ragged_step
 
 
 # leaf name -> logical axes for decode-state leaves (unstacked; a scanned

@@ -139,6 +139,54 @@ def test_paged_flash_decode_allclose(page, pps, dtype):
     assert not bool(jnp.isnan(got).any())
 
 
+@pytest.mark.parametrize("page,pps", [(8, 4), (16, 2)])
+def test_ragged_paged_flash_allclose(page, pps):
+    """Ragged query packs: per-token slot -> block-table -> pool-row double
+    indirection, per-token visible-length masking (intra-pack causality),
+    and invalid (lens == 0) tokens yielding zeros."""
+    B, kvH, G, hd = 3, 2, 4, 16
+    T = 11
+    npages = B * pps
+    kp = jax.random.normal(jax.random.PRNGKey(1), (npages, page, kvH, hd))
+    vp = jax.random.normal(jax.random.PRNGKey(2), (npages, page, kvH, hd))
+    q = jax.random.normal(KEY, (T, kvH, G, hd))
+    rng = np.random.RandomState(3)
+    perm = rng.permutation(npages)
+    ptab = np.full((B, pps), npages, np.int32)
+    fills = [pps * page, page + 1, 3]  # per-slot written prefix
+    for b in range(B):
+        used = -(-fills[b] // page)
+        ptab[b, :used] = perm[b * pps:b * pps + used]
+    # a mixed pack: several tokens per slot at increasing positions, plus
+    # one invalid token (lens 0)
+    slot = np.asarray([0, 0, 1, 2, 0, 1, 2, 0, 1, 0, 2], np.int32)
+    lens = np.zeros(T, np.int32)
+    cursor = {b: 1 for b in range(B)}
+    for t in range(T - 1):
+        b = int(slot[t])
+        lens[t] = min(cursor[b], fills[b])
+        cursor[b] += rng.randint(1, 4)
+    lens[T - 1] = 0  # invalid pack tail
+
+    got = ops.ragged_paged_flash(q, kp, vp, jnp.asarray(ptab),
+                                 jnp.asarray(slot), jnp.asarray(lens))
+    # oracle: gather each token's slot context, mask by its visible length
+    k = jnp.take(kp, jnp.asarray(ptab), axis=0,
+                 mode="clip").reshape(B, pps * page, kvH, hd)[slot]
+    v = jnp.take(vp, jnp.asarray(ptab), axis=0,
+                 mode="clip").reshape(B, pps * page, kvH, hd)[slot]
+    s = jnp.einsum("tkgd,tskd->tkgs", q, k) * hd ** -0.5
+    mask = jnp.arange(pps * page)[None] < jnp.asarray(lens)[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    want = jnp.einsum("tkgs,tskd->tkgd", jax.nn.softmax(s, -1), v)
+    valid = lens > 0
+    np.testing.assert_allclose(np.asarray(got[valid]),
+                               np.asarray(want[valid]),
+                               **_tol(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got[~valid]), 0.0, atol=1e-6)
+    assert not bool(jnp.isnan(got).any())
+
+
 # ---------------------------------------------------------------------------
 # rmsnorm
 

@@ -1,10 +1,13 @@
-"""Serving-engine tests: FIFO ordering and slot reuse under churn, EOS /
-max-token termination, paged-vs-contiguous and chunked-vs-unchunked token
-identity, page-pool overcommit, and the Pallas paged-decode path."""
+"""Serving-engine tests: ragged single-program token identity (vs the seed
+reference engine and solo decode), exactly-one-compiled-program assertions,
+decode-never-stalls-during-prefill, seeded sampling, FIFO ordering and slot
+reuse under churn, EOS / max-token termination, page-pool hygiene and
+overcommit, and the Pallas ragged paged-decode path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.models import model as M
@@ -142,6 +145,154 @@ def test_recurrent_hybrid_serves_correctly():
 
 
 # ---------------------------------------------------------------------------
+# Ragged single program
+
+
+def _reference_solo(params, cfg, prompt, max_tokens):
+    """Ground truth via the seed ReferenceEngine at batch 1 — the only
+    traffic shape it serves correctly for arbitrary lengths (its positions
+    are lock-step across slots)."""
+    ref = ReferenceEngine(params, cfg, batch_size=1, cache_len=CACHE)
+    uid = ref.submit(prompt, max_tokens=max_tokens)
+    return ref.run()[uid]
+
+
+def test_ragged_mixed_concurrent_matches_reference(qwen):
+    """Token identity on mixed-length concurrent traffic: every request out
+    of the ragged pack matches the seed reference engine run solo."""
+    cfg, params = qwen
+    prompts = _prompts(cfg, [5, 19, 11, 26, 8], seed=21)
+    eng, uids, got = _serve(cfg, params, prompts, batch_size=2,
+                            token_budget=24)
+    for u, p in zip(uids, prompts):
+        assert got[u] == _reference_solo(params, cfg, p, 4)
+    assert eng.stats["traces"] == 1
+
+
+def test_exactly_one_program_for_any_traffic_mix(qwen):
+    """The tentpole claim: one compiled program serves pure prefill, pure
+    decode, and every blend — asserted by the trace counter AND the jit
+    cache across two full runs with different traffic."""
+    cfg, params = qwen
+    eng = ServeEngine(params, cfg, batch_size=3, cache_len=CACHE,
+                      page_size=8, prefill_chunk=16, token_budget=32)
+    uids = [eng.submit(p, max_tokens=5)
+            for p in _prompts(cfg, [26, 4, 17, 9, 12], seed=22)]
+    got = eng.run()
+    assert sorted(got) == sorted(uids)
+    # second run, different mix, same engine: still the one program
+    u2 = [eng.submit(p, max_tokens=2) for p in _prompts(cfg, [7, 7], seed=23)]
+    got2 = eng.run()
+    assert sorted(got2) == sorted(u2)
+    assert eng.stats["traces"] == 1
+    cache_size = getattr(eng._ragged_step, "_cache_size", lambda: 1)()
+    assert cache_size == 1
+
+
+def test_ragged_matches_chunked_two_phase(qwen):
+    """A/B: the ragged engine and the PR 1 two-phase engine (ragged=False)
+    emit identical greedy tokens on identical traffic."""
+    cfg, params = qwen
+    prompts = _prompts(cfg, [26, 9, 17, 5], seed=24)
+    _, u1, r1 = _serve(cfg, params, prompts, ragged=True)
+    _, u2, r2 = _serve(cfg, params, prompts, ragged=False)
+    assert [r1[u] for u in u1] == [r2[u] for u in u2]
+
+
+@settings(max_examples=5, deadline=None)
+@given(budget=st.sampled_from([8, 24, 64]),
+       chunk=st.sampled_from([4, 8, 16]),
+       page=st.sampled_from([4, 8, 64]))
+def test_ragged_property_over_budget_chunk_page(qwen, budget, chunk, page):
+    """Property: token identity and single-program compilation hold over
+    random (token_budget, prefill_chunk, page_size) combos."""
+    cfg, params = qwen
+    prompts = _prompts(cfg, [5, 19, 11, 26], seed=1)
+    eng, uids, got = _serve(cfg, params, prompts, batch_size=2,
+                            prefill_chunk=chunk, page_size=page,
+                            token_budget=budget)
+    for u, p in zip(uids, prompts):
+        assert got[u] == _solo_decode(params, cfg, p, 4)
+    assert eng.stats["traces"] == 1
+
+
+def test_decode_never_stalls_during_prefill(qwen):
+    """The head-of-line fix: while a long document prefills, a decoding
+    chat slot emits a token EVERY tick in the ragged engine; the two-phase
+    engine stalls it for the whole prefill burst."""
+    cfg, params = qwen
+    [chat] = _prompts(cfg, [4], seed=30)
+    [filler] = _prompts(cfg, [4], seed=31)
+    [doc] = _prompts(cfg, [56], seed=32)
+
+    def run(ragged):
+        eng = ServeEngine(params, cfg, batch_size=2, cache_len=CACHE,
+                          page_size=8, prefill_chunk=8, token_budget=16,
+                          ragged=ragged)
+        u_chat = eng.submit(chat, max_tokens=12)
+        eng.submit(filler, max_tokens=1)  # frees its slot for the doc
+        eng.submit(doc, max_tokens=2)  # admitted mid-chat-decode
+        eng.run()
+        ticks = [t for uid, t, _ in eng.token_log if uid == u_chat]
+        return eng, ticks
+
+    eng, ticks = run(True)
+    assert max(np.diff(ticks)) == 1  # consecutive ticks, no stall
+    # ...and the doc really was prefilling during several of those ticks
+    assert sum(eng.tick_log[t][0] for t in ticks) >= 3
+    _, ticks_chunked = run(False)
+    assert max(np.diff(ticks_chunked)) > 1  # the two-phase engine stalls
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+
+
+def test_seeded_sampling_deterministic_and_packing_invariant(qwen):
+    """Seeded temperature/top-k sampling repeats exactly and is invariant
+    to how ticks were packed (one RNG draw per emitted token)."""
+    cfg, params = qwen
+    prompts = _prompts(cfg, [8, 14], seed=40)
+
+    def run(chunk, budget, temperature):
+        eng = ServeEngine(params, cfg, batch_size=2, cache_len=CACHE,
+                          page_size=8, prefill_chunk=chunk,
+                          token_budget=budget)
+        uids = [eng.submit(p, max_tokens=6, temperature=temperature,
+                           top_k=50, seed=123 + i)
+                for i, p in enumerate(prompts)]
+        got = eng.run()
+        return [got[u] for u in uids]
+
+    a = run(16, 24, 8.0)
+    assert a == run(16, 24, 8.0)  # same seeds -> same tokens
+    assert a == run(8, 40, 8.0)  # packing-invariant
+    assert a != run(16, 24, 0.0)  # actually samples (high temperature)
+
+
+def test_top_k_one_is_greedy(qwen):
+    cfg, params = qwen
+    [prompt] = _prompts(cfg, [10], seed=41)
+    eng = ServeEngine(params, cfg, batch_size=1, cache_len=CACHE,
+                      page_size=8, prefill_chunk=16, token_budget=8)
+    u1 = eng.submit(prompt, max_tokens=4, temperature=5.0, top_k=1, seed=0)
+    u2 = eng.submit(prompt, max_tokens=4)  # greedy default
+    got = eng.run()
+    assert got[u1] == got[u2]
+
+
+def test_sampling_validation(qwen):
+    cfg, params = qwen
+    eng = ServeEngine(params, cfg, batch_size=2, cache_len=32, page_size=8)
+    with pytest.raises(ValueError):
+        eng.submit([1, 2, 3], temperature=-0.5)
+    with pytest.raises(ValueError):
+        eng.submit([1, 2, 3], temperature=1.0, top_k=0)
+    with pytest.raises(ValueError):
+        ServeEngine(params, cfg, batch_size=4, token_budget=2)
+
+
+# ---------------------------------------------------------------------------
 # Scheduling / lifecycle
 
 
@@ -191,6 +342,27 @@ def test_page_pool_overcommit_queues_fifo(qwen):
     assert len(eng._free) == eng.n_pages
 
 
+def test_page_pool_returns_to_initial_after_three_waves(qwen):
+    """Page-pool hygiene regression: admit/retire 3 waves of requests
+    through one engine and assert the allocator's free-page count returns
+    to its initial value after every wave (no page leak), including a wave
+    terminated early by EOS."""
+    cfg, params = qwen
+    eng = ServeEngine(params, cfg, batch_size=3, cache_len=CACHE,
+                      page_size=8, prefill_chunk=16, token_budget=32)
+    n0 = len(eng._free)
+    assert n0 == eng.n_pages
+    eos = None
+    for wave in range(3):
+        prompts = _prompts(cfg, [9, 17, 12], seed=50 + wave)
+        uids = [eng.submit(p, max_tokens=3, eos_id=eos) for p in prompts]
+        got = eng.run()
+        assert sorted(got) == sorted(uids)
+        assert len(eng._free) == n0 and not any(eng.slots)
+        # next wave terminates via EOS on a token the model actually emits
+        eos = got[uids[0]][0]
+
+
 def test_submit_validation(qwen):
     cfg, params = qwen
     eng = ServeEngine(params, cfg, batch_size=2, cache_len=32, page_size=8)
@@ -212,8 +384,10 @@ def test_tick_budget_exhaustion_releases_slots(qwen):
     eng = ServeEngine(params, cfg, batch_size=2, cache_len=CACHE,
                       page_size=8, prefill_chunk=16)
     uids = [eng.submit(p, max_tokens=6) for p in prompts]
-    partial = eng.run(max_ticks=3)  # 1 prefill + 2 decode ticks
-    assert all(len(partial[u]) == 2 for u in uids)
+    # 3 ragged ticks: the first packs the whole 9-token prompt AND the
+    # first decode token, so each request has 3 of its 6 tokens
+    partial = eng.run(max_ticks=3)
+    assert all(len(partial[u]) == 3 for u in uids)
     assert len(eng._free) == eng.n_pages and not any(eng.slots)
     u2 = eng.submit(prompts[0], max_tokens=4)
     assert eng.run()[u2] == _solo_decode(params, cfg, prompts[0], 4)
