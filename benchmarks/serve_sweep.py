@@ -17,15 +17,28 @@ analogue sweeps (concurrent users × prompt-length mix × page size) through
   workload in which long prompts stream through the slots while short chats
   decode; the two-phase engine stalls every decoder for the length of each
   prefill burst, the ragged engine packs decode tokens into every tick.
+- **prefix-cache on/off under continuous Poisson arrivals** — the paper's
+  cache-mode experiment at serving time: requests sharing one system
+  prompt arrive per-tick (exponential gaps, driven through the public
+  ``ServeEngine.tick`` API rather than batch drain), and the refcounted
+  prefix cache serves the warm prefix from resident pages instead of
+  re-prefilling it.  Reports tokens/s sharing-on vs sharing-off plus
+  ``prefix_hit_rate`` / ``tokens_reused``, and checks greedy outputs stay
+  token-identical to the seed reference engine.
+
+The JSON payload also records ``tuned_serving_config`` — the single
+(token_budget, prefill_chunk, page_size) point that
+``core.autotune.select_serve_defaults`` picks from the analytic roofline
+sweep ("set it once system-wide").
 
   PYTHONPATH=src python benchmarks/serve_sweep.py [--arch qwen2-1.5b]
       [--users 4 16] [--page-sizes 8 32] [--max-tokens 8] [--no-baseline]
       [--smoke] [--json BENCH_serve.json]
 
 CSV: name,tokens_per_s,derived  (derived = ×-over-seed / ×-over-chunked /
-%-of-bound / latency ratio).  ``--json`` additionally writes the rows +
-latency results machine-readably (the perf trajectory lives in
-BENCH_serve.json at the repo root).
+%-of-bound / latency ratio / prefix hit rate).  ``--json`` additionally
+writes the rows + latency + prefix-scenario results machine-readably (the
+perf trajectory lives in BENCH_serve.json at the repo root).
 """
 import argparse
 import json
@@ -114,6 +127,81 @@ def latency_scenario(cfg, params, *, cache_len: int, warm: bool = True):
     return out
 
 
+def prefix_scenario(cfg, params, *, cache_len: int, n_requests: int = 12,
+                    rate: float = 1.5, max_tokens: int = 4, seed: int = 13,
+                    check_reference: bool = True):
+    """Shared-system-prompt serving under continuous per-tick arrivals.
+
+    ``n_requests`` requests — one long shared system prompt plus a short
+    unique user suffix each — arrive with exponential inter-arrival gaps
+    (a Poisson process at ``rate`` requests/tick), submitted mid-flight
+    through ``ServeEngine.tick``.  Each engine is driven twice: the first
+    pass compiles and (for prefix-on) populates the cache, the second is
+    the measured warm run — the steady state of a long-running server.
+
+    Returns {"prefix-on": {...}, "prefix-off": {...}, "speedup",
+    "token_identical"} with per-mode tokens/s and cache counters.
+    """
+    rng = np.random.RandomState(seed)
+    sys_prompt = rng.randint(0, cfg.vocab_size, int(cache_len * 0.75))
+    prompts = [np.concatenate([sys_prompt,
+                               rng.randint(0, cfg.vocab_size,
+                                           rng.randint(3, 9))])
+               for _ in range(n_requests)]
+    arrive_tick = np.floor(np.cumsum(
+        rng.exponential(1.0 / rate, size=n_requests))).astype(int)
+
+    out = {}
+    outputs = {}
+    for mode in ("prefix-off", "prefix-on"):
+        eng = ServeEngine(params, cfg, batch_size=4, cache_len=cache_len,
+                          page_size=16, prefill_chunk=32, token_budget=128,
+                          prefix_cache=(mode == "prefix-on"))
+
+        def drive():
+            uids, done, i, tick = [], {}, 0, 0
+            t0 = time.perf_counter()
+            while i < n_requests or not eng.idle:
+                while i < n_requests and arrive_tick[i] <= tick:
+                    uids.append(eng.submit(prompts[i],
+                                           max_tokens=max_tokens))
+                    i += 1
+                done.update(eng.tick())
+                tick += 1
+                assert tick < 100_000, "prefix scenario failed to drain"
+            dt = time.perf_counter() - t0
+            n_tok = sum(len(done[u]) for u in uids)
+            assert all(len(done[u]) == max_tokens for u in uids)
+            return n_tok / dt, [done[u] for u in uids]
+
+        drive()  # cold: compile + populate the prefix cache
+        before = dict(eng.stats)
+        tps, outputs[mode] = drive()  # measured warm run
+        adm = eng.stats["admissions"] - before["admissions"]
+        hits = eng.stats["prefix_hits"] - before["prefix_hits"]
+        out[mode] = {
+            "tokens_per_s": tps,
+            "prefix_hit_rate": hits / max(adm, 1),
+            "tokens_reused": (eng.stats["prefix_tokens_reused"]
+                              - before["prefix_tokens_reused"]),
+            "cow_copies": eng.stats["cow_copies"] - before["cow_copies"],
+            "evictions": eng.stats["evictions"] - before["evictions"],
+            "cached_pages": eng.cached_pages,
+            "ticks": eng.stats["ticks"] - before["ticks"],
+            "traces": eng.stats["traces"],
+        }
+    identical = outputs["prefix-on"] == outputs["prefix-off"]
+    if check_reference:  # greedy identity against the seed engine, solo
+        ref = ReferenceEngine(params, cfg, batch_size=1, cache_len=cache_len)
+        ref_uids = [ref.submit(p, max_tokens=max_tokens) for p in prompts]
+        want = ref.run(max_ticks=8192)
+        identical &= outputs["prefix-on"] == [want[u] for u in ref_uids]
+    return {**out,
+            "speedup": (out["prefix-on"]["tokens_per_s"]
+                        / out["prefix-off"]["tokens_per_s"]),
+            "token_identical": bool(identical)}
+
+
 def sweep(arch: str, users, page_sizes, max_tokens: int, cache_len: int,
           baseline: bool = True, warm: bool = True):
     cfg = get_config(arch, smoke=True)
@@ -168,7 +256,16 @@ def sweep(arch: str, users, page_sizes, max_tokens: int, cache_len: int,
              / lat["ragged"]["p50_decode_ms_under_prefill"])
     rows.append((f"serve/{arch}/latency/p50-improvement", ratio,
                  "x-lower-p50-decode-under-prefill"))
-    return rows, lat
+    pre = prefix_scenario(cfg, params, cache_len=max(cache_len, 256))
+    for mode in ("prefix-off", "prefix-on"):
+        r = pre[mode]
+        rows.append((f"serve/{arch}/prefix/{mode}", r["tokens_per_s"],
+                     f"prefix_hit_rate={r['prefix_hit_rate']:.2f},"
+                     f"tokens_reused={r['tokens_reused']}"))
+    rows.append((f"serve/{arch}/prefix/speedup", pre["speedup"],
+                 "x-over-no-sharing,token_identical="
+                 + str(pre["token_identical"]).lower()))
+    return rows, lat, pre
 
 
 def main(argv=None):
@@ -188,13 +285,15 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.smoke:
         args.users, args.page_sizes, args.max_tokens = [4], [8], 4
-    rows, lat = sweep(args.arch, args.users, args.page_sizes,
-                      args.max_tokens, args.cache_len,
-                      baseline=not args.no_baseline, warm=not args.cold)
+    rows, lat, pre = sweep(args.arch, args.users, args.page_sizes,
+                           args.max_tokens, args.cache_len,
+                           baseline=not args.no_baseline, warm=not args.cold)
     print("name,tokens_per_s,derived")
     for name, tps, derived in rows:
         print(f"{name},{tps:.1f},{derived}", flush=True)
     if args.json:
+        from repro.core.autotune import select_serve_defaults
+
         payload = {
             "arch": args.arch,
             "grid": {"users": args.users, "page_sizes": args.page_sizes,
@@ -203,6 +302,9 @@ def main(argv=None):
             "rows": [{"name": n, "tokens_per_s": t, "derived": d}
                      for n, t, d in rows],
             "latency_under_concurrent_prefill": lat,
+            "prefix_scenario": pre,
+            "tuned_serving_config": select_serve_defaults(
+                args.arch, smoke=True)["best"],
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

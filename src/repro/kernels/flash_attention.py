@@ -219,6 +219,12 @@ def ragged_paged_flash(q, kp, vp, ptab, slot, lens, *, interpret: bool = True):
     token (``q_pos + 1``; 0 = invalid token, output is zeros);
     kp, vp: (n_pages, page, kvH, hd); ptab: (B, pps) int32 block table.
     Returns (T, kvH, G, hd).  Full (non-windowed) causal layers only.
+
+    Refcounted prefix-shared pages (serve.engine) require NO kernel change:
+    every K/V tile is fetched through the token -> slot -> page indirection
+    above, so block-table rows of different slots aliasing the same pool
+    page read the same bytes, and copy-on-write happens before the step in
+    the allocator (a ``kernels.ops.copy_pages`` call), never in here.
     """
     T, kvH, G, hd = q.shape
     npages, page = kp.shape[0], kp.shape[1]

@@ -39,9 +39,37 @@ def paged_flash_decode(q, kp, vp, ptab, lens):
 def ragged_paged_flash(q, kp, vp, ptab, slot, lens):
     """Ragged-pack serving attention over a block-table-paged KV pool.
     q: (T,kvH,G,hd); slot/lens: (T,); kp/vp: (n_pages,page,kvH,hd)
-    -> (T,kvH,G,hd)."""
+    -> (T,kvH,G,hd).
+
+    Prefix-shared pages need no kernel support: the kernel resolves
+    token -> slot -> page through ``ptab`` per grid step, so two slots whose
+    block-table rows point at the same pool page simply DMA the same tile —
+    sharing and copy-on-write are entirely a host-side allocator concern."""
     return _fa.ragged_paged_flash(q, kp, vp, ptab, slot, lens,
                                   interpret=_interpret())
+
+
+def copy_pages(pool, src, dst):
+    """Copy-on-write page copy: ``pool[..., dst[i], :, :, :] = pool[..., src[i], ...]``.
+
+    pool: (..., n_pages, page, kvH, hd) — an optional leading layer axis from
+    scanned stages rides along in each slice.  src/dst: (K,) int32 with a
+    FIXED K (the engine pads unused pairs with the ``n_pages`` sentinel), so
+    the op stays one traced program.  Implemented as K unrolled
+    dynamic-slice updates rather than one batched scatter: with the pool
+    donated, each update is an in-place page-sized memcpy (the same pattern
+    as a KV-cache write), whereas a scatter with leading batch-dim slices
+    makes XLA CPU rewrite the whole pool (~2 model steps per call when
+    measured).  Sentinel pairs clamp to a self-copy of the last page — a
+    byte-identical no-op."""
+    ax = pool.ndim - 4
+    n = pool.shape[ax]
+    for i in range(src.shape[0]):
+        v = jax.lax.dynamic_index_in_dim(pool, jnp.minimum(src[i], n - 1),
+                                         axis=ax, keepdims=True)
+        pool = jax.lax.dynamic_update_slice_in_dim(
+            pool, v, jnp.minimum(dst[i], n - 1), axis=ax)
+    return pool
 
 
 def _flash_grouped_local(q, k, v, window):

@@ -38,6 +38,9 @@ def main(argv=None):
     ap.add_argument("--flash-decode", action="store_true",
                     help="route global-layer decode through the Pallas "
                          "paged kernel")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the refcounted prefix cache / COW pages "
+                         "(sharing is auto-disabled for hybrid models)")
     args = ap.parse_args(argv)
 
     if skip_reason(args.arch, "decode_32k"):
@@ -55,7 +58,8 @@ def main(argv=None):
                              prefill_chunk=args.prefill_chunk,
                              token_budget=args.token_budget,
                              ragged=args.engine == "ragged",
-                             flash_decode=args.flash_decode)
+                             flash_decode=args.flash_decode,
+                             prefix_cache=not args.no_prefix_cache)
     rng = np.random.RandomState(0)
     sample_kw = {}
     if args.engine != "reference" and args.temperature > 0:

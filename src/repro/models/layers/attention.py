@@ -205,6 +205,14 @@ def prefill_cache(params, cfg: AttnCfg, cache, x, positions):
 # Unmapped block-table entries hold the OOB sentinel ``n_pages``: scatters to
 # them are dropped, gathers clamp to an arbitrary page whose entries are then
 # masked via ``kpos`` (-1 = never written).
+#
+# Prefix sharing rides on the same indirection: the serving engine may point
+# several slots' block-table rows at ONE pool page (a cached shared prompt
+# prefix, refcounted host-side).  Reads go through ptab and need nothing new;
+# writes never target a shared page because a slot's first unmatched position
+# always lands in a privately allocated page (copy-on-write duplicates a
+# partially matched page before admission).  kpos for inherited positions is
+# preset by ``reset_paged_slots`` so the reused KV is visible immediately.
 
 
 def init_paged_cache(cfg: AttnCfg, batch: int, cache_len: int, dtype, *,

@@ -227,14 +227,48 @@ def ragged_step(params, cfg: ModelCfg, state, tokens, slot, q_pos, seq_idx,
     return logits[:, 0], {"layers": new_layers}
 
 
-def reset_paged_slots(cfg: ModelCfg, state, init_state, mask, ptab_rows) -> Dict:
+def reset_paged_slots(cfg: ModelCfg, state, init_state, mask, ptab_rows,
+                      prefix_len) -> Dict:
     """Admission/eviction: for slots where ``mask`` is set, install the
     host-allocated block-table rows and restore all other per-row state from
-    the fresh-init template (KV pools are shared and untouched)."""
-    new_layers = [tfm.reset_stage_slots(st, ss, is0, mask, ptab_rows)
+    the fresh-init template (KV pools are shared and untouched — they double
+    as the cross-request prefix cache).  ``prefix_len`` (B,) marks how many
+    leading positions each admitted slot inherits from shared prefix pages:
+    their kpos/slen come up live so the reused KV is visible immediately
+    (see ``transformer.reset_stage_slots``)."""
+    new_layers = [tfm.reset_stage_slots(st, ss, is0, mask, ptab_rows,
+                                        prefix_len)
                   for st, ss, is0 in zip(cfg.stages, state["layers"],
                                          init_state["layers"])]
     return {"layers": new_layers}
+
+
+def copy_kv_pages(cfg: ModelCfg, state, src, dst) -> Dict:
+    """Copy-on-write support: duplicate pool pages ``src[i] -> dst[i]`` in
+    every paged global-attention layer (all layers share one page allocator,
+    so a single (src, dst) pair list covers the whole stack).
+
+    Used by the serving engine when a request's prompt diverges from a cached
+    prefix mid-page: the matched part of the page is copied into a private
+    page the new request owns, then prefill overwrites the divergent tail
+    (stale offsets stay masked via kpos until written).  src/dst: (K,) int32;
+    padding entries carry src == dst == n_pages and clamp to a harmless
+    self-copy no-op (see ``kernels.ops.copy_pages``).
+    Windowed circular buffers and recurrent states have no shareable pages
+    and pass through untouched."""
+    from repro.kernels import ops as kops
+
+    def leaf_copy(path, leaf):
+        name = None
+        for p in reversed(path):
+            if isinstance(p, jax.tree_util.DictKey):
+                name = p.key
+                break
+        if name in ("kp", "vp"):
+            return kops.copy_pages(leaf, src, dst)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(leaf_copy, state)
 
 
 def prefill(params, cfg: ModelCfg, state, tokens, enc_feats=None) -> Dict:

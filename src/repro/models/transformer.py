@@ -408,11 +408,20 @@ def stage_step_ragged(params, cfg: ModelCfg, stage: Stage, x, states, slot,
     return x, list(new_states)
 
 
-def reset_stage_slots(stage: Stage, states, init_states, mask, ptab_rows):
+def reset_stage_slots(stage: Stage, states, init_states, mask, ptab_rows,
+                      prefix_len):
     """Reset per-slot rows (admission): install ``ptab_rows`` into block
     tables, restore every other per-row leaf from the fresh-init template.
     KV pools are shared across slots and left alone — stale pages are dead
-    via kpos/ptab.  mask: (B,), ptab_rows: (B, pages_per_slot)."""
+    via kpos/ptab, and pages owned by the prefix cache must survive slot
+    churn.  ``prefix_len`` (B,) is the number of leading tokens whose KV the
+    slot inherits from shared prefix pages already present in the pool: those
+    positions get live ``kpos`` (0..prefix_len-1 at their natural cache
+    index, which for paged layers is the absolute position) and ``slen``
+    starts at ``prefix_len``, so attention sees the reused prefix without a
+    single prefill token being recomputed.  A zero prefix_len reproduces the
+    old cold-slot reset exactly.  mask: (B,), ptab_rows: (B, pages_per_slot),
+    prefix_len: (B,) int32."""
     lead = 1 if stage.repeats > 1 else 0
     out = []
     for s_blk, i_blk in zip(states, init_states):
@@ -422,7 +431,15 @@ def reset_stage_slots(stage: Stage, states, init_states, mask, ptab_rows):
                 new[name] = leaf
                 continue
             m = mask.reshape((1,) * lead + (-1,) + (1,) * (leaf.ndim - lead - 1))
-            src = ptab_rows if name == "ptab" else i_blk[name]
+            if name == "kpos":
+                iota = jnp.arange(leaf.shape[-1], dtype=jnp.int32)[None, :]
+                src = jnp.where(iota < prefix_len[:, None], iota, -1)
+            elif name == "slen":
+                src = prefix_len.astype(leaf.dtype)
+            elif name == "ptab":
+                src = ptab_rows
+            else:
+                src = i_blk[name]
             new[name] = jnp.where(m, src, leaf)
         out.append(new)
     return out

@@ -1,52 +1,75 @@
-"""Ragged token-budget serving engine: one compiled program for any traffic.
+"""Ragged token-budget serving engine with a refcounted, copy-on-write,
+prefix-cached page pool: one compiled program AND one resident working set
+for any traffic.
 
-The paper's core result is that ONE set of system settings keeps every
-(Nproc × Nthread) factorization near practical peak.  The serving analogue:
-one compiled program that stays near the roofline for any mix of prefilling
-and decoding requests.  PR 1 got to two programs — a ``(B, chunk)`` prefill
-and a ``(B, 1)`` decode — but a tick was either one or the other, so every
-prefill chunk stalled every decoding slot (head-of-line interference, the
-exact failure mode the paper's single-configuration discipline eliminates).
+The paper's core result is that ONE set of system settings (KMP_AFFINITY +
+taskset + all2all **cache** mode) keeps every (Nproc × Nthread)
+factorization near practical peak — and the decisive setting is the cache
+mode: the shared working set is served from cache instead of being
+recomputed or refetched per process.  This engine applies both halves of
+that lesson to serving:
 
-This engine collapses the two-phase tick into a single jit'd **ragged
-step** (``serve_step.make_ragged_step`` / ``models.model.ragged_step``):
+- **One compiled program** (PR 2): each tick a host-side scheduler packs a
+  fixed token budget ``T`` (``token_budget``) with decode tokens FIRST (a
+  decoding slot emits every tick; prefill never stalls it) and prefill
+  chunks (≤ ``prefill_chunk`` per slot) in the leftover budget, driving a
+  single jit'd ``(T,)`` ragged step (``serve_step.make_ragged_step``) with
+  per-token (slot, position, validity) vectors.  The mix is pure data, so
+  exactly ONE program is ever traced (``stats["traces"]``).
+- **One resident working set** (this PR): thousands of requests sharing a
+  system-prompt prefix are the serving analogue of the paper's "millions of
+  users" hitting the same data — so the paged KV pool is a shared,
+  refcounted cache rather than scratch space.  The "all2all cache mode" of
+  the engine: the shared prefix stays resident and every request reads it
+  from the pool instead of re-prefilling it.
 
-- **Token-budget packs** — each tick, a host-side scheduler packs a fixed
-  token budget ``T`` (``token_budget``, default 128) with a mix of prefill
-  chunks and decode tokens from whichever slots have work.  Decode tokens
-  pack first — a decoding slot emits one token EVERY tick, regardless of
-  concurrent prefill — and prefill chunks (≤ ``prefill_chunk`` tokens per
-  slot) fill the leftover budget.  A slot that finishes its prompt inside a
-  pack appends its first decode token to the same pack (one fewer tick to
-  first token).
-- **Per-token (slot, position, validity) vectors** drive the one
-  ``(T,)``-shaped program: attention scatters KV into the same page pools /
-  circular buffers as before, recurrent mixers repack into per-slot dense
-  order, and logits are gathered only at each slot's last packed token.
-  ``prefill_chunk`` and ``token_budget`` are compile-time shapes; the
-  prefill/decode mix is pure data, so exactly ONE program is ever traced
-  (``stats["traces"]``; the admission reset is a separate control-plane
-  program, not part of the serve path).
-- **Paged KV slots** — unchanged from PR 1: global-attention KV lives in
-  page pools behind per-slot block tables, pages are reserved FIFO at
-  admission and freed at completion; windowed layers keep per-slot circular
-  buffers; the allocator and block tables are host-side numpy.
-- **Seeded sampling** — per-request ``temperature`` / ``top_k`` / ``seed``
-  (greedy argmax remains the default and is token-identical to
-  ``reference.ReferenceEngine``).  Sampling runs host-side from the per-slot
-  logits row with one RNG draw per token, so sampled outputs are identical
-  across (budget, chunk, page) packings too.
+Prefix-cache lifecycle (host-side; the device only ever sees block tables):
 
-The PR 1 two-phase path is kept behind ``ragged=False`` for A/B — the
-``benchmarks/serve_sweep.py`` ragged-vs-chunked column and the p50
-decode-latency-under-prefill comparison run both.
+- **Index** — a trie over FULL pages of prompt tokens maps token prefixes to
+  pool pages.  As a slot's prefill passes each page boundary, that page is
+  inserted (pages whose prefix is already owned by another page are left
+  private).  Only prompt pages are indexed — decode output is per-request.
+- **Match** — at admission the queue head's prompt walks the trie: every
+  matched full page is mapped into the slot's block table (refcount++) and
+  prefill starts at the first unmatched token, so a warm system prompt
+  skips almost all prefill compute.  ``reset_paged_slots`` presets
+  kpos/slen for the inherited positions.  Admission reserves ONLY the
+  unmatched-suffix pages — the strict-FIFO no-mid-flight-OOM guarantee now
+  counts what the hit actually needs, not the cold-start worst case.
+- **Copy-on-write** — if the prompt diverges from a cached page mid-page
+  (longest-common-prefix ≥ 1 token), the page is duplicated into a freshly
+  allocated private page with a jit'd page-copy op
+  (``models.model.copy_kv_pages`` → ``kernels.ops.copy_pages``) and the
+  block-table entry points at the copy; stale tail offsets stay masked via
+  kpos until prefill overwrites them.  Writes therefore NEVER target a page
+  with refcount > 1 — asserted by construction: a slot's first unmatched
+  position always falls in a page it owns.
+- **Release / evict** — completion decrements refcounts; refcount-0 pages
+  that are indexed STAY in the pool as cache (LRU-ordered) instead of being
+  freed eagerly, and are evicted leaf-first on allocation pressure.  Pages
+  never indexed return to the free list immediately.  The pool is always
+  fully reclaimable: free + refcount-0-cached == n_pages when idle.
+
+Sharing is enabled automatically only for models whose mixers are all
+global (non-windowed) attention — recurrent states and windowed circular
+buffers are per-slot and cannot be inherited from a page, so hybrid models
+run with ``prefix_len = 0`` and behave exactly as before.
+
+The KV pages shared between slots need no kernel support: the ragged Pallas
+kernel (``kernels.flash_attention.ragged_paged_flash``) already resolves
+token → slot → page per grid step, so aliased block-table rows just DMA the
+same tile.
+
+The PR 1 two-phase path is kept behind ``ragged=False`` for A/B, and the
+seeded-sampling / paged-slot machinery is unchanged from PR 2
+(``benchmarks/serve_sweep.py`` carries the comparisons).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -61,9 +84,35 @@ from repro.serve.serve_step import make_ragged_step
 class _Slot:
     req: Request
     pages: List[int]
-    fill: int = 0  # prompt tokens written so far
+    fill: int = 0  # prompt tokens in cache (matched prefix + prefilled)
     pos: int = 0  # next absolute write position (== len(prompt) at decode)
     last_tok: int = 0
+    # prefix-cache bookkeeping: the trie node matching the indexed prefix so
+    # far (None = this slot's prefix is owned elsewhere, stop indexing) and
+    # how many of this slot's leading pages are on that trie chain
+    node: Optional["_PrefixNode"] = None
+    n_indexed: int = 0
+
+
+class _PrefixNode:
+    """One full page of prompt tokens in the prefix trie.
+
+    ``children`` maps the NEXT page's token tuple to its node, so a cached
+    prefix is a root-to-node chain of full pages.  Refcounts live in the
+    engine's per-page array; a node is evictable when its page's refcount is
+    0 and it has no children (leaf-first eviction keeps every cached chain
+    reachable from the root — an active request holds refs on its whole
+    matched path, so refcounts are monotone non-increasing down the trie)."""
+
+    __slots__ = ("key", "page", "parent", "children", "last_used")
+
+    def __init__(self, key: Optional[Tuple[int, ...]], page: int,
+                 parent: Optional["_PrefixNode"]):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_PrefixNode"] = {}
+        self.last_used = 0
 
 
 class ServeEngine:
@@ -71,7 +120,8 @@ class ServeEngine:
                  cache_len: int = 256, page_size: int = 16,
                  max_pages: Optional[int] = None, prefill_chunk: int = 32,
                  token_budget: int = 128, greedy: bool = True,
-                 ragged: bool = True, flash_decode: bool = False):
+                 ragged: bool = True, flash_decode: bool = False,
+                 prefix_cache: bool = True):
         self.params = params
         self.cfg = cfg
         self.B = batch_size
@@ -89,17 +139,30 @@ class ServeEngine:
         self._has_paged = any(
             blk.mixer == "attn" and blk.attn.window is None
             for st in cfg.stages for blk in st.pattern)
+        # prefix sharing needs EVERY layer's state to live in shareable
+        # pages: recurrent mixers and windowed circular buffers are per-slot
+        # and cannot be inherited, so hybrids serve with sharing off
+        self.prefix_cache = bool(prefix_cache) and self._has_paged and all(
+            blk.mixer == "attn" and blk.attn.window is None
+            for st in cfg.stages for blk in st.pattern)
         self.n_pages = (max_pages if max_pages is not None
                         else batch_size * self.pps)
         self._free: List[int] = list(range(self.n_pages))
+        self._ref = np.zeros(self.n_pages, np.int64)  # per-page refcounts
+        self._root = _PrefixNode(None, -1, None)  # trie of cached prefixes
+        self._page_node: Dict[int, _PrefixNode] = {}  # page -> trie node
+        self._clock = 0  # LRU counter (bumped per touch)
         self.queue: deque = deque()
         self.slots: List[Optional[_Slot]] = [None] * batch_size
         self._uid = 0
         self._rngs: Dict[int, np.random.Generator] = {}
         self.completion_order: List[int] = []
+        self._state = None  # persistent: the pool doubles as the prefix cache
         self.stats = {"chunk_ticks": 0, "decode_ticks": 0, "ragged_ticks": 0,
                       "ticks": 0, "packed_tokens": 0, "traces": 0,
-                      "pages_in_use_peak": 0}
+                      "pages_in_use_peak": 0, "admissions": 0,
+                      "prefix_hits": 0, "prefix_tokens_reused": 0,
+                      "cow_copies": 0, "evictions": 0}
         # per-token / per-tick logs for the latency benchmark:
         # token_log rows are (uid, tick index, wall time); tick_log rows are
         # (had outstanding prefill at tick start, wall time at tick end)
@@ -122,8 +185,14 @@ class ServeEngine:
             p, cfg, s, t, qp, v, with_logits=wl, flash_decode=flash_decode))
         self._chunk_step = jax.jit(step(False), donate_argnums=(1,))
         self._decode_step = jax.jit(step(True), donate_argnums=(1,))
+        # control-plane programs (admission reset, COW page copy) — separate
+        # from the serve path, each traced at most once
         self._reset = jax.jit(
-            lambda s, s0, m, rows: M.reset_paged_slots(cfg, s, s0, m, rows),
+            lambda s, s0, m, rows, plen: M.reset_paged_slots(
+                cfg, s, s0, m, rows, plen),
+            donate_argnums=(0,))
+        self._copy = jax.jit(
+            lambda s, src, dst: M.copy_kv_pages(cfg, s, src, dst),
             donate_argnums=(0,))
 
     def submit(self, prompt, max_tokens: int = 16, eos_id=None, *,
@@ -133,6 +202,8 @@ class ServeEngine:
         prompt = np.asarray(prompt, np.int32)
         if prompt.size == 0:
             raise ValueError("empty prompt")
+        if max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
         if prompt.size + max_tokens > self.cache_len:
             raise ValueError(
                 f"len(prompt)+max_tokens = {prompt.size + max_tokens} "
@@ -146,6 +217,9 @@ class ServeEngine:
         self._uid += 1
         req = Request(self._uid, prompt, max_tokens, eos_id,
                       temperature=temperature, top_k=top_k, seed=seed)
+        # admission reserves only the unmatched suffix on a prefix hit, but
+        # cache contents churn before this request reaches the head of the
+        # queue — validate against the cold-start worst case
         need = self._pages_needed(req)
         if need > self.n_pages:
             raise ValueError(
@@ -157,35 +231,227 @@ class ServeEngine:
         self.queue.append(req)
         return self._uid
 
-    # -- internals --------------------------------------------------------
-    def _pages_needed(self, req: Request) -> int:
+    # -- page allocator / prefix cache ------------------------------------
+    def _pages_needed(self, req: Request, matched_pages: int = 0) -> int:
+        """Pages the request must RESERVE: its full footprint minus the
+        ``matched_pages`` shared prefix pages it maps instead of allocating."""
         if not self._has_paged:
             return 0
-        return -(-(len(req.prompt) + req.max_tokens) // self.page_size)
+        total = -(-(len(req.prompt) + req.max_tokens) // self.page_size)
+        return total - matched_pages
 
+    def _match_prefix(self, prompt: np.ndarray):
+        """Longest cached prefix of ``prompt``: walk the trie a full page at
+        a time, then probe the children of the last matched node for a
+        partial-page hit (longest common prefix ≥ 1 token → COW candidate).
+
+        Returns (node, pages, matched_tokens, cow) with ``pages`` the full
+        shared pages and ``cow`` either None or (src_page, extra_tokens)."""
+        if not self.prefix_cache:
+            return self._root, [], 0, None
+        P = self.page_size
+        node, pages, matched = self._root, [], 0
+        self._clock += 1
+        while matched + P <= len(prompt):
+            child = node.children.get(
+                tuple(int(t) for t in prompt[matched:matched + P]))
+            if child is None:
+                break
+            child.last_used = self._clock
+            node = child
+            pages.append(child.page)
+            matched += P
+        cow = None
+        rem = prompt[matched:]
+        if rem.size and node.children:
+            best_len, best = 0, None
+            for key, child in node.children.items():
+                k = np.asarray(key[:rem.size], np.int32)
+                lcp = int((np.cumprod(k == rem[:k.size]) if k.size else
+                           np.zeros(0)).sum())
+                if lcp > best_len:
+                    best_len, best = lcp, child
+            if best is not None:
+                best.last_used = self._clock
+                cow = (best.page, best_len)
+        return node, pages, matched, cow
+
+    def _evictable(self) -> int:
+        """Cached pages reclaimable under pressure (refcount 0)."""
+        return sum(1 for p in self._page_node if self._ref[p] == 0)
+
+    def _evict_one(self) -> bool:
+        """Drop the least-recently-used refcount-0 LEAF from the trie and
+        return its page to the free list.  Leaf-first keeps every cached
+        chain reachable; a ref-0 node's descendants are all ref-0 (active
+        requests hold their whole matched path), so repetition drains any
+        evictable subtree."""
+        best = None
+        stack = list(self._root.children.values())
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.children.values())
+            if nd.children or self._ref[nd.page] != 0:
+                continue
+            if best is None or nd.last_used < best.last_used:
+                best = nd
+        if best is None:
+            return False
+        del best.parent.children[best.key]
+        del self._page_node[best.page]
+        self._free.append(best.page)
+        self.stats["evictions"] += 1
+        return True
+
+    def _alloc(self, n: int) -> List[int]:
+        while len(self._free) < n:
+            if not self._evict_one():
+                raise RuntimeError(  # unreachable: _admit checks availability
+                    "page pool exhausted with nothing evictable")
+        return [self._free.pop() for _ in range(n)]
+
+    def _release_pages(self, pages: List[int]) -> None:
+        """Drop one reference per page.  Refcount-0 pages stay resident if
+        the prefix trie indexes them (the pool IS the cache; LRU eviction
+        reclaims them under pressure) and are freed immediately otherwise."""
+        for p in pages:
+            self._ref[p] -= 1
+            assert self._ref[p] >= 0, f"page {p} over-released"
+            if self._ref[p] == 0 and p not in self._page_node:
+                self._free.append(p)
+
+    def _release_slot(self, b: int) -> None:
+        s = self.slots[b]
+        self._release_pages(s.pages)
+        self._rngs.pop(s.req.uid, None)
+        self.slots[b] = None
+
+    def _index_filled_pages(self, s: _Slot) -> None:
+        """Insert this slot's freshly completed PROMPT pages into the trie.
+
+        Called whenever ``fill`` advances: every full page now covered by
+        prefilled (or inherited) tokens extends the slot's chain, unless an
+        equivalent page already exists — then the existing page keeps
+        ownership of the prefix and this slot's private duplicate simply
+        never enters the index (freed at completion).  Decode tokens never
+        advance ``fill``, so generated pages are never indexed."""
+        if s.node is None or not self.prefix_cache:
+            return
+        P = self.page_size
+        while (s.n_indexed + 1) * P <= s.fill:
+            j = s.n_indexed
+            key = tuple(int(t) for t in s.req.prompt[j * P:(j + 1) * P])
+            child = s.node.children.get(key)
+            if child is None:
+                child = _PrefixNode(key, s.pages[j], s.node)
+                s.node.children[key] = child
+                self._page_node[s.pages[j]] = child
+            elif child.page != s.pages[j]:
+                s.node = None  # prefix owned elsewhere: stop indexing
+                return
+            self._clock += 1
+            child.last_used = self._clock
+            s.node = child
+            s.n_indexed += 1
+
+    @property
+    def cached_pages(self) -> int:
+        """Pages currently held by the prefix index."""
+        return len(self._page_node)
+
+    @property
+    def reclaimable_pages(self) -> int:
+        """Free pages plus refcount-0 cached pages — the allocator can hand
+        all of these out; equals ``n_pages`` whenever no request is live."""
+        return len(self._free) + self._evictable()
+
+    def drop_prefix_cache(self) -> int:
+        """Evict every refcount-0 cached page (A/B runs, tests).  Returns
+        the number of pages returned to the free list."""
+        n = 0
+        while self._evict_one():
+            n += 1
+        return n
+
+    # -- admission --------------------------------------------------------
     def _admit(self, state):
-        """FIFO admission: a request enters a free slot only when its whole
-        page reservation fits (no mid-flight OOM, no reordering)."""
+        """FIFO admission: a request enters a free slot only when the pages
+        it actually needs — its unmatched suffix, after the longest-cached-
+        prefix match — fit in free + evictable pages (no mid-flight OOM, no
+        reordering, and no starving the head of line on pages a prefix hit
+        would never use)."""
         mask = np.zeros(self.B, bool)
         rows = np.full((self.B, self.pps), self.n_pages, np.int32)
+        plen = np.zeros(self.B, np.int32)
+        # unused COW pairs keep the n_pages sentinel: kernels.ops.copy_pages
+        # turns them into self-copy no-ops, so the op is one fixed-width trace
+        cow_src = np.full(self.B, self.n_pages, np.int32)
+        cow_dst = np.full(self.B, self.n_pages, np.int32)
+        cow_pins: List[int] = []
+        n_cow = 0
         for b in range(self.B):
             if self.slots[b] is not None or not self.queue:
                 continue
-            need = self._pages_needed(self.queue[0])
-            if need > len(self._free):
+            req = self.queue[0]
+            node, mpages, matched, cow = self._match_prefix(req.prompt)
+            need = self._pages_needed(req, matched_pages=len(mpages))
+
+            def supply(pins):
+                # free + evictable AFTER this admission pins its matched /
+                # COW-source pages: a currently refcount-0 cached page the
+                # request itself is about to hold must not be counted as
+                # reclaimable supply for its own allocation
+                held = sum(1 for p in set(pins) if self._ref[p] == 0)
+                return len(self._free) + self._evictable() - held
+
+            if cow is not None and need > supply(mpages + [cow[0]]):
+                cow = None  # pinning the COW source would leave the pool
+                # short one page: forgo the partial-page reuse (it is an
+                # optimization; the full-page match alone always fits)
+            if need > supply(mpages):
                 break  # strict FIFO: head of line waits for pages
-            req = self.queue.popleft()
-            pages = [self._free.pop() for _ in range(need)]
-            rows[b, :need] = pages
-            self.slots[b] = _Slot(req, pages)
+            self.queue.popleft()
+            for p in mpages:
+                self._ref[p] += 1
+            if cow is not None:
+                self._ref[cow[0]] += 1  # pin the COW source vs eviction
+                cow_pins.append(cow[0])
+            alloc = self._alloc(need)
+            for p in alloc:
+                self._ref[p] += 1
+            if cow is not None:
+                cow_src[b], cow_dst[b] = cow[0], alloc[0]
+                matched += cow[1]
+                n_cow += 1
+            pages = mpages + alloc
+            rows[b, :len(pages)] = pages
+            plen[b] = matched
+            s = _Slot(req, pages, fill=matched, node=node,
+                      n_indexed=len(mpages))
+            if matched >= len(req.prompt):
+                # whole prompt cached: straight to decode, same resume
+                # scheme as a completed prefill (last token, position L)
+                s.pos = len(req.prompt)
+                s.last_tok = int(req.prompt[-1])
+            self.slots[b] = s
             mask[b] = True
+            self.stats["admissions"] += 1
+            if matched:
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_tokens_reused"] += matched
         if mask.any():
-            in_use = self.n_pages - len(self._free)
             self.stats["pages_in_use_peak"] = max(
-                self.stats["pages_in_use_peak"], in_use)
-            state = self._reset(state, self._template, mask, rows)
+                self.stats["pages_in_use_peak"], int((self._ref > 0).sum()))
+            if n_cow:
+                # device-side ordering is by data dependency (copy feeds the
+                # reset feeds the tick), so the host may unpin right away
+                state = self._copy(state, cow_src, cow_dst)
+                self.stats["cow_copies"] += n_cow
+            self._release_pages(cow_pins)
+            state = self._reset(state, self._template, mask, rows, plen)
         return state
 
+    # -- sampling / bookkeeping -------------------------------------------
     def _sample(self, req: Request, logits_row: np.ndarray) -> int:
         """One token from a (V,) logits row: greedy argmax at temperature 0,
         seeded temperature/top-k sampling otherwise (one RNG draw per token,
@@ -203,7 +469,7 @@ class ServeEngine:
 
     def _finish_token(self, b: int, tok: int, results: Dict) -> None:
         """Book one sampled token for slot ``b``: emit, advance, retire the
-        request (freeing its pages) on EOS / max_tokens."""
+        request (releasing its page refs) on EOS / max_tokens."""
         s = self.slots[b]
         req = s.req
         req.out_tokens.append(tok)
@@ -214,9 +480,7 @@ class ServeEngine:
                 or (req.eos_id is not None and tok == req.eos_id)):
             results[req.uid] = req.out_tokens
             self.completion_order.append(req.uid)
-            self._free.extend(s.pages)
-            self._rngs.pop(req.uid, None)
-            self.slots[b] = None
+            self._release_slot(b)
         else:
             s.last_tok = tok
 
@@ -226,7 +490,9 @@ class ServeEngine:
 
         Decode first (no decoding slot ever stalls), then prefill chunks in
         slot order until the budget runs out; a slot whose prompt completes
-        in this pack appends its first decode token right behind it."""
+        in this pack appends its first decode token right behind it.  Slots
+        admitted on a full prefix hit enter the decode section on their very
+        first tick — the whole prefill phase is skipped."""
         T, W = self.budget, self.chunk + 1
         tokens = np.zeros(T, np.int32)
         slot = np.zeros(T, np.int32)
@@ -261,6 +527,7 @@ class ServeEngine:
             valid[n:n + c] = True
             n += c
             s.fill += c
+            self._index_filled_pages(s)
             if s.fill >= L:
                 # decode resumes from the last prompt token at position L
                 # (same scheme as the reference engine, for token identity)
@@ -308,6 +575,7 @@ class ServeEngine:
             q_pos[b] = s.fill + np.arange(C)
             valid[b, :n] = True
             s.fill += n
+            self._index_filled_pages(s)
             if s.fill >= L:
                 s.pos = L
                 s.last_tok = int(s.req.prompt[-1])
@@ -336,31 +604,51 @@ class ServeEngine:
             self._finish_token(b, self._sample(s.req, rows[b]), results)
         return state, results
 
+    # -- driving ----------------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        """No live slot and nothing queued."""
+        return all(s is None for s in self.slots) and not self.queue
+
+    def _ensure_state(self):
+        """Decode state is created once and persists for the engine's whole
+        life: freeing it between runs would throw away the prefix cache (the
+        pool's pages ARE the cached data)."""
+        if self._state is None:
+            self._state = M.init_paged_state(
+                self.params, self.cfg, self.B, self.cache_len,
+                page_size=self.page_size, n_pages=self.n_pages,
+                window_extra=self.chunk)
+            # the reset template must not alias the (donated) live state
+            self._template = jax.tree.map(jax.numpy.copy, self._state)
+
+    def tick(self) -> Dict[int, List[int]]:
+        """One scheduling tick: admit from the queue, pack, run one program
+        step.  Returns the requests that finished this tick ({uid: tokens}).
+        Public so continuous-arrival drivers (benchmarks/serve_sweep.py) can
+        interleave ``submit`` with serving instead of draining a batch."""
+        self._ensure_state()
+        self._state = self._admit(self._state)
+        had_prefill = any(s is not None and s.fill < len(s.req.prompt)
+                          for s in self.slots)
+        results: Dict[int, List[int]] = {}
+        if self.ragged:
+            self._state, results = self._ragged_tick(self._state)
+        elif had_prefill:
+            self._state = self._prefill_tick(self._state)
+        elif any(s is not None for s in self.slots):
+            self._state, results = self._decode_tick(self._state)
+        self.stats["ticks"] += 1
+        self.tick_log.append((had_prefill, time.perf_counter()))
+        return results
+
     def run(self, max_ticks: int = 4096) -> Dict[int, List[int]]:
         """Drain the queue; returns {uid: generated tokens}."""
-        state = M.init_paged_state(self.params, self.cfg, self.B,
-                                   self.cache_len, page_size=self.page_size,
-                                   n_pages=self.n_pages,
-                                   window_extra=self.chunk)
-        # the reset template must not alias the (donated) live state
-        self._template = jax.tree.map(jax.numpy.copy, state)
         results: Dict[int, List[int]] = {}
         for _ in range(max_ticks):
-            if all(s is None for s in self.slots) and not self.queue:
+            if self.idle:
                 break
-            state = self._admit(state)
-            had_prefill = any(s is not None and s.fill < len(s.req.prompt)
-                              for s in self.slots)
-            if self.ragged:
-                state, done = self._ragged_tick(state)
-                results.update(done)
-            elif had_prefill:
-                state = self._prefill_tick(state)
-            elif any(s is not None for s in self.slots):
-                state, done = self._decode_tick(state)
-                results.update(done)
-            self.stats["ticks"] += 1
-            self.tick_log.append((had_prefill, time.perf_counter()))
+            results.update(self.tick())
         # drain partials on tick-budget exhaustion, releasing slots/pages so
         # the engine stays reusable (no page leak, no stale decode state);
         # never-admitted requests report their (empty) partials too, so every
@@ -368,9 +656,7 @@ class ServeEngine:
         for b, s in enumerate(self.slots):
             if s is not None:
                 results[s.req.uid] = s.req.out_tokens
-                self._free.extend(s.pages)
-                self._rngs.pop(s.req.uid, None)
-                self.slots[b] = None
+                self._release_slot(b)
         while self.queue:
             req = self.queue.popleft()
             results[req.uid] = req.out_tokens

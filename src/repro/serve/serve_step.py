@@ -12,6 +12,14 @@ Two step builders live here:
   data, which is what keeps the program count at exactly one regardless of
   traffic.
 
+The engine's prefix cache adds no step builder: sharing is an allocator
+concern.  Block-table rows of several slots may alias one pool page; the
+ragged step reads KV through ptab either way, admission presets kpos/slen
+for inherited positions via ``models.model.reset_paged_slots`` (a separate
+control-plane program, like the COW page copy
+``models.model.copy_kv_pages``), and the serve-path trace count stays at
+exactly one.
+
 ``STATE_AXES`` names the logical axes of every decode-state leaf — the
 lock-step cache (k/v/k_pos/pos) and the ragged/paged engine's leaves (kp/vp
 page pools, ptab block tables, kpos per-slot positions, slen fill counts) —

@@ -24,3 +24,36 @@ assert names == {"baseline", "bf16-params"}
 assert all("error" not in r for r in out["table"]), out["table"]
 print("OK", out["best"]["candidate"], out["best"]["dominant"])
 """, n_devices=8, timeout=600)
+
+
+def test_select_serve_defaults_emits_one_config():
+    """The serving-time analogue of the paper's tuned-once config: the sweep
+    emits exactly one (token_budget, prefill_chunk, page_size) whose worst
+    traffic-mix point is the best worst-case across the grid."""
+    from repro.core.autotune import select_serve_defaults
+
+    out = select_serve_defaults("qwen2-1.5b", smoke=True, context_len=100)
+    best, table = out["best"], out["table"]
+    assert best["token_budget"] in (64, 128, 256)
+    assert best["prefill_chunk"] in (16, 32, 64)
+    assert best["page_size"] in (8, 16, 32)
+    assert 0.0 < best["score"] <= 1.0
+    # full grid evaluated (chunks must leave decode room in the budget)
+    n_valid = sum(1 for tb in (64, 128, 256) for pc in (16, 32, 64)
+                  if pc < tb) * 3
+    assert len(table) == n_valid
+    # max-min selection: nobody beats the winner's worst-case fraction
+    assert all(r["score"] <= best["score"] + 1e-12 for r in table)
+    # deterministic (analytic model, no measurement noise)
+    again = select_serve_defaults("qwen2-1.5b", smoke=True, context_len=100)
+    assert again["best"] == best
+
+
+def test_select_serve_defaults_respects_batch_constraint():
+    from repro.core.autotune import select_serve_defaults
+
+    out = select_serve_defaults("qwen2-1.5b", smoke=True, batch_size=96,
+                                context_len=100)
+    # token_budget < batch_size candidates are dropped (engine invariant)
+    assert all(r["token_budget"] >= 96 for r in out["table"])
+    assert out["best"]["token_budget"] >= 96

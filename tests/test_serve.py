@@ -2,7 +2,9 @@
 reference engine and solo decode), exactly-one-compiled-program assertions,
 decode-never-stalls-during-prefill, seeded sampling, FIFO ordering and slot
 reuse under churn, EOS / max-token termination, page-pool hygiene and
-overcommit, and the Pallas ragged paged-decode path."""
+overcommit, the refcounted prefix cache (warm-prefix identity, mid-page COW
+divergence, LRU eviction, refcount no-leak), and the Pallas ragged
+paged-decode path (including aliased shared pages)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -305,7 +307,10 @@ def test_fifo_ordering_and_slot_reuse_under_churn(qwen):
     assert sorted(got) == sorted(uids) and all(len(v) == 3 for v in got.values())
     waves = [set(eng.completion_order[i:i + 3]) for i in (0, 3, 6)]
     assert waves == [set(uids[0:3]), set(uids[3:6]), set(uids[6:9])]
-    assert not any(eng.slots) and len(eng._free) == eng.n_pages
+    # completed prompt pages may stay resident as prefix cache (refcount 0,
+    # evictable); every page must be reclaimable and unpinned
+    assert not any(eng.slots) and (eng._ref == 0).all()
+    assert eng.reclaimable_pages == eng.n_pages
 
 
 def test_eos_termination(qwen):
@@ -339,14 +344,16 @@ def test_page_pool_overcommit_queues_fifo(qwen):
                                    max_pages=pages_two)
     assert [r_tight[u] for u in u_tight] == [r_full[u] for u in u_full]
     assert eng.stats["pages_in_use_peak"] <= pages_two
-    assert len(eng._free) == eng.n_pages
+    assert (eng._ref == 0).all()
+    assert eng.reclaimable_pages == eng.n_pages
 
 
 def test_page_pool_returns_to_initial_after_three_waves(qwen):
-    """Page-pool hygiene regression: admit/retire 3 waves of requests
-    through one engine and assert the allocator's free-page count returns
-    to its initial value after every wave (no page leak), including a wave
-    terminated early by EOS."""
+    """Page-pool hygiene regression, extended to refcounts: admit/retire 3
+    waves of requests through one engine and assert after every wave that
+    every page has returned to refcount 0 and the pool is fully reclaimable
+    (free + refcount-0 cached == n_pages — no leak, no pinned stragglers),
+    including a wave terminated early by EOS."""
     cfg, params = qwen
     eng = ServeEngine(params, cfg, batch_size=3, cache_len=CACHE,
                       page_size=8, prefill_chunk=16, token_budget=32)
@@ -358,9 +365,15 @@ def test_page_pool_returns_to_initial_after_three_waves(qwen):
         uids = [eng.submit(p, max_tokens=3, eos_id=eos) for p in prompts]
         got = eng.run()
         assert sorted(got) == sorted(uids)
-        assert len(eng._free) == n0 and not any(eng.slots)
+        assert not any(eng.slots)
+        assert (eng._ref == 0).all()
+        assert eng.reclaimable_pages == eng.n_pages
+        assert len(eng._free) + eng.cached_pages == eng.n_pages
         # next wave terminates via EOS on a token the model actually emits
         eos = got[uids[0]][0]
+    # dropping the cache returns every page to the free list
+    eng.drop_prefix_cache()
+    assert len(eng._free) == eng.n_pages and eng.cached_pages == 0
 
 
 def test_submit_validation(qwen):
@@ -388,6 +401,278 @@ def test_tick_budget_exhaustion_releases_slots(qwen):
     # first decode token, so each request has 3 of its 6 tokens
     partial = eng.run(max_ticks=3)
     assert all(len(partial[u]) == 3 for u in uids)
-    assert len(eng._free) == eng.n_pages and not any(eng.slots)
+    assert eng.reclaimable_pages == eng.n_pages and not any(eng.slots)
+    assert (eng._ref == 0).all()
+    # resubmitting hits the prefix cached by the truncated run and must
+    # still be token-identical to the solo ground truth
     u2 = eng.submit(prompts[0], max_tokens=4)
     assert eng.run()[u2] == _solo_decode(params, cfg, prompts[0], 4)
+    assert eng.stats["prefix_hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache: warm hits, COW divergence, eviction, refcount hygiene
+
+
+def _with_prefix(shared, suffixes):
+    return [np.concatenate([shared, s]) for s in suffixes]
+
+
+def test_warm_prefix_hits_are_token_identical(qwen):
+    """A second wave reusing a cached system prompt skips its prefill
+    (prefix_hits / prefix_tokens_reused advance, packed tokens drop) and
+    stays bit-identical to the solo ground truth — with the serve path
+    still exactly one compiled program."""
+    cfg, params = qwen
+    [shared] = _prompts(cfg, [40], seed=60)  # 5 full pages at page_size=8
+    wave1 = _with_prefix(shared, _prompts(cfg, [5, 7], seed=61))
+    wave2 = _with_prefix(shared, _prompts(cfg, [6, 4], seed=62))
+    eng = ServeEngine(params, cfg, batch_size=2, cache_len=CACHE,
+                      page_size=8, prefill_chunk=16, token_budget=32)
+    u1 = [eng.submit(p, max_tokens=4) for p in wave1]
+    r1 = eng.run()
+    cold_packed = eng.stats["packed_tokens"]
+    u2 = [eng.submit(p, max_tokens=4) for p in wave2]
+    r2 = eng.run()
+    warm_packed = eng.stats["packed_tokens"] - cold_packed
+    for u, p in zip(u1 + u2, wave1 + wave2):
+        assert {**r1, **r2}[u] == _solo_decode(params, cfg, p, 4)
+    assert eng.stats["prefix_hits"] >= 2  # both wave-2 requests hit
+    assert eng.stats["prefix_tokens_reused"] >= 2 * 40
+    assert warm_packed < cold_packed / 2  # the prefill compute was skipped
+    assert eng.stats["traces"] == 1
+    assert (eng._ref == 0).all()
+    assert eng.reclaimable_pages == eng.n_pages
+
+
+def test_fully_cached_prompt_skips_straight_to_decode(qwen):
+    """A prompt that is one exact full cached page starts decoding on its
+    first tick (zero prefill tokens packed for it)."""
+    cfg, params = qwen
+    [p] = _prompts(cfg, [16], seed=63)  # exactly 2 pages at page_size=8
+    eng = ServeEngine(params, cfg, batch_size=1, cache_len=CACHE,
+                      page_size=8, prefill_chunk=16, token_budget=8)
+    u1 = eng.submit(p, max_tokens=3)
+    r1 = eng.run()
+    packed_cold = eng.stats["packed_tokens"]
+    u2 = eng.submit(p, max_tokens=3)
+    r2 = eng.run()
+    assert r2[u2] == r1[u1] == _solo_decode(params, cfg, p, 3)
+    # warm run packs exactly one decode token per emitted token
+    assert eng.stats["packed_tokens"] - packed_cold == 3
+    assert eng.stats["prefix_tokens_reused"] == 16
+
+
+def test_cow_divergence_mid_page(qwen):
+    """Two prompts sharing 18 tokens then diverging mid-page (page_size=8):
+    the second rides 2 shared pages plus a COW copy of the third (a full
+    cached page whose tail it overwrites), and both outputs match their solo
+    ground truths."""
+    cfg, params = qwen
+    rng = np.random.RandomState(70)
+    a = rng.randint(0, cfg.vocab_size, 26)  # 3 FULL pages + a partial tail
+    b = a.copy()
+    b[18:] = (b[18:] + 1) % cfg.vocab_size
+    eng = ServeEngine(params, cfg, batch_size=2, cache_len=CACHE,
+                      page_size=8, prefill_chunk=16, token_budget=32)
+    ua = eng.submit(a, max_tokens=4)
+    ra = eng.run()
+    ub = eng.submit(b, max_tokens=4)
+    rb = eng.run()
+    assert ra[ua] == _solo_decode(params, cfg, a, 4)
+    assert rb[ub] == _solo_decode(params, cfg, b, 4)
+    assert eng.stats["cow_copies"] == 1
+    assert eng.stats["prefix_tokens_reused"] == 18  # 2 full pages + 2 in-page
+    assert (eng._ref == 0).all()
+    assert eng.reclaimable_pages == eng.n_pages
+
+
+@settings(max_examples=6, deadline=None)
+@given(share=st.sampled_from([3, 9, 16, 21, 27]),
+       page=st.sampled_from([4, 8]))
+def test_cow_property_shared_then_divergent(qwen, share, page):
+    """Property: for any shared-prefix length (page-aligned or mid-page) and
+    page size, serving A then a B that diverges at ``share`` reuses exactly
+    the shared tokens covered by A's FULL (indexable) pages — a mid-page
+    share point costs one COW copy — and both stay token-identical to solo
+    decode, with the pool fully reclaimable after."""
+    cfg, params = qwen
+    rng = np.random.RandomState(71)
+    a = rng.randint(0, cfg.vocab_size, 28)
+    b = a.copy()
+    b[share:] = (b[share:] + 1 + rng.randint(0, 100)) % cfg.vocab_size
+    eng = ServeEngine(params, cfg, batch_size=2, cache_len=CACHE,
+                      page_size=page, prefill_chunk=8, token_budget=16)
+    ua = eng.submit(a, max_tokens=4)
+    ra = eng.run()
+    ub = eng.submit(b, max_tokens=4)
+    rb = eng.run()
+    assert ra[ua] == _solo_decode(params, cfg, a, 4)
+    assert rb[ub] == _solo_decode(params, cfg, b, 4)
+    # only A's full pages enter the index: its partial tail page is private
+    reusable = min(share, (len(a) // page) * page)
+    assert eng.stats["prefix_tokens_reused"] == reusable
+    assert eng.stats["cow_copies"] == (1 if reusable % page else 0)
+    assert (eng._ref == 0).all()
+    assert eng.reclaimable_pages == eng.n_pages
+
+
+def test_prefix_cache_lru_eviction_under_pressure(qwen):
+    """A pool sized for ~2 requests serving many distinct prompts must evict
+    cached pages (LRU over refcount-0) instead of deadlocking, and still
+    produce correct tokens; a recently cached prefix still hits."""
+    cfg, params = qwen
+    prompts = _prompts(cfg, [20, 24, 18, 22, 21, 19], seed=72)
+    eng = ServeEngine(params, cfg, batch_size=2, cache_len=CACHE,
+                      page_size=8, prefill_chunk=16, token_budget=32,
+                      max_pages=8)
+    uids = [eng.submit(p, max_tokens=3) for p in prompts]
+    got = eng.run()
+    for u, p in zip(uids, prompts):
+        assert got[u] == _solo_decode(params, cfg, p, 3)
+    assert eng.stats["evictions"] > 0
+    assert (eng._ref == 0).all()
+    assert eng.reclaimable_pages == eng.n_pages
+    # the LAST prompt's pages are the freshest cache entries: resubmitting
+    # it hits even in the tight pool
+    hits0 = eng.stats["prefix_hits"]
+    u2 = eng.submit(prompts[-1], max_tokens=3)
+    assert eng.run()[u2] == got[uids[-1]]
+    assert eng.stats["prefix_hits"] > hits0
+
+
+def test_prefix_sharing_concurrent_in_flight(qwen):
+    """A request admitted while the prefix OWNER is still decoding shares
+    the owner's pages (refcount > 1 on the shared pages, asserted
+    mid-flight via the tick API) — and both finish correctly."""
+    cfg, params = qwen
+    [shared] = _prompts(cfg, [24], seed=73)
+    a, b = _with_prefix(shared, _prompts(cfg, [4, 6], seed=74))
+    eng = ServeEngine(params, cfg, batch_size=2, cache_len=CACHE,
+                      page_size=8, prefill_chunk=16, token_budget=32)
+    ua = eng.submit(a, max_tokens=12)
+    done = {}
+    for _ in range(3):  # a finishes prefill and starts decoding
+        done.update(eng.tick())
+    ub = eng.submit(b, max_tokens=2)
+    done.update(eng.tick())  # b admitted while a decodes
+    assert eng.stats["prefix_hits"] == 1
+    shared_pages = 24 // 8
+    assert (eng._ref == 2).sum() == shared_pages  # pages aliased by a and b
+    while not eng.idle:
+        done.update(eng.tick())
+    assert done[ua] == _solo_decode(params, cfg, a, 12)
+    assert done[ub] == _solo_decode(params, cfg, b, 2)
+    assert (eng._ref == 0).all()
+
+
+def test_flash_ragged_shared_pages_match_jnp(qwen):
+    """The Pallas ragged kernel needs no change for aliased block-table
+    rows: warm-prefix traffic through flash_decode=True matches the jnp
+    path token for token, with hits on both engines."""
+    cfg, params = qwen
+    [shared] = _prompts(cfg, [32], seed=75)
+    prompts = _with_prefix(shared, _prompts(cfg, [5, 3], seed=76))
+
+    def run(flash):
+        eng = ServeEngine(params, cfg, batch_size=2, cache_len=CACHE,
+                          page_size=8, prefill_chunk=16, token_budget=32,
+                          flash_decode=flash)
+        u1 = [eng.submit(p, max_tokens=4) for p in prompts]
+        r1 = eng.run()
+        u2 = [eng.submit(p, max_tokens=4) for p in prompts]
+        r2 = eng.run()
+        assert eng.stats["prefix_hits"] >= 2
+        return [r1[u] for u in u1] + [r2[u] for u in u2]
+
+    assert run(False) == run(True)
+
+
+def test_prefix_cache_disabled_for_hybrid_models(gemma):
+    """Windowed circular buffers and recurrent states are per-slot and
+    cannot be inherited from shared pages: sharing is auto-disabled (and
+    explicit opt-out works on shareable models too)."""
+    cfg_g, params_g = gemma
+    eng = ServeEngine(params_g, cfg_g, batch_size=2, cache_len=CACHE,
+                      page_size=8)
+    assert not eng.prefix_cache
+    cfg_x = get_config("xlstm-350m", smoke=True)
+    params_x = M.init_params(KEY, cfg_x)
+    eng = ServeEngine(params_x, cfg_x, batch_size=2, cache_len=CACHE,
+                      page_size=8)
+    assert not eng.prefix_cache
+
+
+def test_prefix_cache_opt_out_matches_opt_in(qwen):
+    """prefix_cache=False serves identical warm traffic with zero hits and
+    identical tokens (the A/B knob the benchmark sweeps)."""
+    cfg, params = qwen
+    [shared] = _prompts(cfg, [24], seed=77)
+    prompts = _with_prefix(shared, _prompts(cfg, [4, 5], seed=78))
+
+    def run(on):
+        eng = ServeEngine(params, cfg, batch_size=2, cache_len=CACHE,
+                          page_size=8, prefill_chunk=16, token_budget=32,
+                          prefix_cache=on)
+        outs = []
+        for _ in range(2):
+            uids = [eng.submit(p, max_tokens=4) for p in prompts]
+            got = eng.run()
+            outs += [got[u] for u in uids]
+        return outs, eng.stats
+
+    on_outs, on_stats = run(True)
+    off_outs, off_stats = run(False)
+    assert on_outs == off_outs
+    assert on_stats["prefix_hits"] >= 2 and off_stats["prefix_hits"] == 0
+    assert off_stats["prefix_tokens_reused"] == 0
+
+
+def test_tick_api_continuous_arrivals(qwen):
+    """Requests submitted mid-flight through the public tick() API (the
+    continuous-arrival driver contract) complete token-identically."""
+    cfg, params = qwen
+    prompts = _prompts(cfg, [9, 13, 7], seed=79)
+    eng = ServeEngine(params, cfg, batch_size=2, cache_len=CACHE,
+                      page_size=8, prefill_chunk=16, token_budget=32)
+    uids = [eng.submit(prompts[0], max_tokens=5)]
+    done = {}
+    done.update(eng.tick())
+    uids.append(eng.submit(prompts[1], max_tokens=5))
+    done.update(eng.tick())
+    uids.append(eng.submit(prompts[2], max_tokens=5))
+    for _ in range(64):
+        if eng.idle:
+            break
+        done.update(eng.tick())
+    for u, p in zip(uids, prompts):
+        assert done[u] == _solo_decode(params, cfg, p, 5)
+    assert eng.stats["traces"] == 1
+
+
+def test_admission_feasible_when_match_pins_all_evictable_pages(qwen):
+    """Corner from review: the head request's own matched (refcount-0)
+    pages and COW source must not be counted as evictable supply for its
+    allocation.  Here the request's footprint equals the whole pool, every
+    cached page belongs to its own match, and pinning the COW source too
+    would leave the pool one page short — the engine must forgo the
+    partial-page COW and admit on the full-page match alone rather than
+    dying in _alloc or waiting forever."""
+    cfg, params = qwen
+    rng = np.random.RandomState(80)
+    a = rng.randint(0, cfg.vocab_size, 24)  # 3 full pages cached after run
+    eng = ServeEngine(params, cfg, batch_size=1, cache_len=56, page_size=8,
+                      prefill_chunk=16, token_budget=16, max_pages=7)
+    ua = eng.submit(a, max_tokens=8)
+    ra = eng.run()
+    assert eng.cached_pages == 3 and (eng._ref == 0).all()
+    # b: 2 full pages + 3-token mid-page lcp of a, then diverges; its
+    # 7-page footprint is the ENTIRE pool
+    b = np.concatenate([a[:19], rng.randint(0, cfg.vocab_size, 25)])
+    ub = eng.submit(b, max_tokens=8)
+    rb = eng.run()
+    assert rb[ub] == _solo_decode(params, cfg, b, 8)
+    assert eng.stats["cow_copies"] == 0  # COW forgone, not crashed
+    assert eng.stats["prefix_tokens_reused"] == 16  # full-page match kept
+    assert (eng._ref == 0).all()
+    assert eng.reclaimable_pages == eng.n_pages
