@@ -25,11 +25,18 @@ analogue sweeps (concurrent users × prompt-length mix × page size) through
   re-prefilling it.  Reports tokens/s sharing-on vs sharing-off plus
   ``prefix_hit_rate`` / ``tokens_reused``, and checks greedy outputs stay
   token-identical to the seed reference engine.
+- **fp32-vs-int8 KV pool A/B at a fixed page-pool BYTE budget** — the
+  quantized-working-set experiment: both arms get the same pool bytes, so
+  the int8 arm holds 2-4× the resident pages and admits more concurrent
+  decoders on decode-heavy traffic (throughput + greedy top-1 agreement +
+  p50 decode gap + max-resident-pages per arm), plus a warm-prefix pass
+  on the int8 pool (hits must stay token-identical to the int8 cold path
+  — quantize-at-write means a cached page replays exactly).
 
 The JSON payload also records ``tuned_serving_config`` — the single
-(token_budget, prefill_chunk, page_size) point that
+(token_budget, prefill_chunk, page_size, kv_dtype) point that
 ``core.autotune.select_serve_defaults`` picks from the analytic roofline
-sweep ("set it once system-wide").
+sweep ("set it once system-wide", memory representation included).
 
   PYTHONPATH=src python benchmarks/serve_sweep.py [--arch qwen2-1.5b]
       [--users 4 16] [--page-sizes 8 32] [--max-tokens 8] [--no-baseline]
@@ -50,7 +57,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.roofline import mixed_bound
 from repro.models import model as M
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ServeEngine, kv_page_bytes
 from repro.serve.reference import ReferenceEngine
 
 # mixed-length mix: short chat turns + a few long-context stragglers
@@ -77,16 +84,21 @@ def _run(engine, prompts, max_tokens: int):
     return n_tok / dt, results
 
 
-def _decode_gap_p50_ms(eng) -> float:
-    """p50 wall-time gap between consecutive tokens of one request, counting
-    only gaps that span >= 1 tick with outstanding prefill work (decode
-    latency UNDER CONCURRENT PREFILL — the head-of-line metric)."""
+def _p50_token_gap_ms(eng, skip: int = 0,
+                      under_prefill_only: bool = False) -> float:
+    """p50 wall-time gap between consecutive tokens of one request.
+
+    ``under_prefill_only`` counts only gaps spanning >= 1 tick with
+    outstanding prefill work (decode latency UNDER CONCURRENT PREFILL — the
+    head-of-line metric); ``skip`` drops log entries from a warmup run on
+    the same engine (the kv-dtype A/B warms in place)."""
     last = {}
     gaps = []
-    for uid, tick, t in eng.token_log:
+    for uid, tick, t in eng.token_log[skip:]:
         if uid in last:
             t0, tick0 = last[uid]
-            if any(hp for hp, _ in eng.tick_log[tick0 + 1:tick + 1]):
+            if (not under_prefill_only
+                    or any(hp for hp, _ in eng.tick_log[tick0 + 1:tick + 1])):
                 gaps.append(t - t0)
         last[uid] = (t, tick)
     return float(np.median(gaps) * 1e3) if gaps else float("nan")
@@ -121,7 +133,8 @@ def latency_scenario(cfg, params, *, cache_len: int, warm: bool = True):
             drive(make())
         eng = make()
         tps = drive(eng)
-        out[mode] = {"p50_decode_ms_under_prefill": _decode_gap_p50_ms(eng),
+        out[mode] = {"p50_decode_ms_under_prefill": _p50_token_gap_ms(
+                         eng, under_prefill_only=True),
                      "tokens_per_s": tps,
                      "ticks": eng.stats["ticks"]}
     return out
@@ -202,6 +215,99 @@ def prefix_scenario(cfg, params, *, cache_len: int, n_requests: int = 12,
             "token_identical": bool(identical)}
 
 
+def kv_ab_scenario(cfg, params, *, cache_len: int = 64, batch_size: int = 8,
+                   page_size: int = 8, seed: int = 17, warm: bool = True):
+    """fp32-vs-int8 paged-pool A/B at a FIXED page-pool byte budget.
+
+    Both arms serve identical decode-heavy traffic (short prompts, long
+    generations — the regime where per-token KV page reads dominate) with
+    the same pool BYTES: the fp32 arm gets pages for ~2 in-flight requests,
+    the int8 arm gets however many pages the same bytes buy (~2-4× more,
+    scale rows included).  More resident pages means more concurrently
+    decoding slots per tick, so int8 throughput beats fp32 at equal bytes —
+    the serving analogue of the paper's result that fitting the working set
+    in fast memory, not adding compute, is what moves the bound.
+
+    Returns per-grid-point rows {"users", "max_tokens", "fp32": {...},
+    "int8": {...}, "top1_agreement", "speedup"} plus a prefix-on-int8
+    warm-path check (cached int8 pages must replay token-identically).
+    """
+    rng = np.random.RandomState(seed)
+    # decode-heavy grid: many users, short prompts, generations dominate
+    grid = [(batch_size, 24), (batch_size + 2, 16)]
+    max_prompt = 16  # prompt lengths drawn from [8, max_prompt]
+    # byte budget = pages for ~2 in-flight WORST-CASE requests at fp32: the
+    # fp32 arm is page-starved (the premise of the A/B), the int8 arm gets
+    # the same bytes' worth of pages
+    footprint = -(-(max_prompt + max(mt for _, mt in grid)) // page_size)
+    fp32_pages = 2 * footprint
+    budget_bytes = fp32_pages * kv_page_bytes(cfg, page_size, "float32")
+    int8_pages = budget_bytes // max(
+        kv_page_bytes(cfg, page_size, "int8"), 1)
+
+    def run(kv_dtype, n_pages, prompts, max_tokens):
+        eng = ServeEngine(params, cfg, batch_size=batch_size,
+                          cache_len=cache_len, page_size=page_size,
+                          prefill_chunk=16, token_budget=max(32, batch_size),
+                          prefix_cache=False, max_pages=n_pages,
+                          kv_dtype=kv_dtype)
+        if warm:  # jit caches are per-engine-instance: warm THIS instance
+            _run(eng, prompts, max_tokens)
+        skip = len(eng.token_log)
+        tps, results = _run(eng, prompts, max_tokens)
+        return eng, tps, results, skip
+
+    points = []
+    for n_users, max_tokens in grid:
+        prompts = [rng.randint(0, cfg.vocab_size, int(L))
+                   for L in rng.randint(8, max_prompt + 1, size=n_users)]
+        point = {"users": n_users, "max_tokens": max_tokens}
+        outs = {}
+        for kvd, n_pages in (("float32", fp32_pages), ("int8", int8_pages)):
+            eng, tps, results, skip = run(kvd, n_pages, prompts, max_tokens)
+            outs[kvd] = [tok for u in sorted(results) for tok in results[u]]
+            point[kvd if kvd == "int8" else "fp32"] = {
+                "tokens_per_s": tps,
+                "p50_decode_gap_ms": _p50_token_gap_ms(eng, skip=skip),
+                "max_resident_pages": eng.n_pages,
+                "pages_in_use_peak": eng.stats["pages_in_use_peak"],
+                "kv_bytes_per_token": eng.stats["kv_bytes_per_token"],
+                "kv_pool_bytes": eng.stats["kv_pool_bytes"],
+            }
+        n_match = sum(a == b for a, b in zip(outs["float32"], outs["int8"]))
+        point["top1_agreement"] = n_match / max(len(outs["float32"]), 1)
+        point["speedup"] = (point["int8"]["tokens_per_s"]
+                            / point["fp32"]["tokens_per_s"])
+        points.append(point)
+
+    # warm-path identity on the int8 pool: a prefix hit maps cached int8
+    # pages + scale rows into the new slot — byte-identical replay of the
+    # cold path (quantize-at-write), so outputs must match exactly
+    shared = rng.randint(0, cfg.vocab_size, 4 * page_size)
+    warm_prompts = [np.concatenate([shared, rng.randint(0, cfg.vocab_size, 5)])
+                    for _ in range(2)]
+    eng = ServeEngine(params, cfg, batch_size=2, cache_len=cache_len,
+                      page_size=page_size, prefill_chunk=16, token_budget=32,
+                      kv_dtype="int8")
+    u_cold = [eng.submit(p, max_tokens=4) for p in warm_prompts]
+    cold = eng.run()
+    u_warm = [eng.submit(p, max_tokens=4) for p in warm_prompts]
+    warm_r = eng.run()
+    prefix = {
+        "prefix_hits": eng.stats["prefix_hits"],
+        "tokens_reused": eng.stats["prefix_tokens_reused"],
+        "warm_identical": ([cold[u] for u in u_cold]
+                           == [warm_r[u] for u in u_warm]),
+    }
+    return {
+        "byte_budget": int(budget_bytes),
+        "pages": {"float32": int(fp32_pages), "int8": int(int8_pages)},
+        "points": points,
+        "min_top1_agreement": min(p["top1_agreement"] for p in points),
+        "prefix_int8": prefix,
+    }
+
+
 def sweep(arch: str, users, page_sizes, max_tokens: int, cache_len: int,
           baseline: bool = True, warm: bool = True):
     cfg = get_config(arch, smoke=True)
@@ -265,7 +371,21 @@ def sweep(arch: str, users, page_sizes, max_tokens: int, cache_len: int,
     rows.append((f"serve/{arch}/prefix/speedup", pre["speedup"],
                  "x-over-no-sharing,token_identical="
                  + str(pre["token_identical"]).lower()))
-    return rows, lat, pre
+    kv_ab = kv_ab_scenario(cfg, params, warm=warm)
+    for p in kv_ab["points"]:
+        for arm in ("fp32", "int8"):
+            rows.append((
+                f"serve/{arch}/kv-ab/{arm}/users={p['users']}"
+                f"/max_tokens={p['max_tokens']}",
+                p[arm]["tokens_per_s"],
+                f"pages={p[arm]['max_resident_pages']},"
+                f"p50_decode_gap_ms={p[arm]['p50_decode_gap_ms']:.1f}"))
+        rows.append((
+            f"serve/{arch}/kv-ab/speedup/users={p['users']}"
+            f"/max_tokens={p['max_tokens']}", p["speedup"],
+            f"x-int8-over-fp32-at-equal-bytes,"
+            f"top1_agreement={p['top1_agreement']:.3f}"))
+    return rows, lat, pre, kv_ab
 
 
 def main(argv=None):
@@ -285,9 +405,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.smoke:
         args.users, args.page_sizes, args.max_tokens = [4], [8], 4
-    rows, lat, pre = sweep(args.arch, args.users, args.page_sizes,
-                           args.max_tokens, args.cache_len,
-                           baseline=not args.no_baseline, warm=not args.cold)
+    rows, lat, pre, kv_ab = sweep(args.arch, args.users, args.page_sizes,
+                                  args.max_tokens, args.cache_len,
+                                  baseline=not args.no_baseline,
+                                  warm=not args.cold)
     print("name,tokens_per_s,derived")
     for name, tps, derived in rows:
         print(f"{name},{tps:.1f},{derived}", flush=True)
@@ -303,6 +424,7 @@ def main(argv=None):
                      for n, t, d in rows],
             "latency_under_concurrent_prefill": lat,
             "prefix_scenario": pre,
+            "kv_dtype_ab": kv_ab,
             "tuned_serving_config": select_serve_defaults(
                 args.arch, smoke=True)["best"],
         }

@@ -69,9 +69,11 @@ def select_defaults(arch: str, shape_name: str, mesh, **kw) -> Dict:
 
 
 # ---------------------------------------------------------------------------
-# Serving-time autotune: ONE (token_budget, prefill_chunk, page_size) for all
-# traffic — the paper's "set it once system-wide, every grid point stays near
-# peak" claim at serving time.  Instead of per-workload retuning, we sweep
+# Serving-time autotune: ONE (token_budget, prefill_chunk, page_size,
+# kv_dtype) for all traffic — the paper's "set it once system-wide, every
+# grid point stays near peak" claim at serving time, now including the
+# memory representation (the analogue of the paper's decisive cache-mode
+# setting).  Instead of per-workload retuning, we sweep
 # the serving knobs against the analytic roofline blend
 # (core.roofline.mixed_bound) over a traffic-mix grid (decode-heavy steady
 # state, a chat/doc blend, a prefill burst — each at a short-chat and a
@@ -85,18 +87,24 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
                           token_budgets=(64, 128, 256),
                           prefill_chunks=(16, 32, 64),
                           page_sizes=(8, 16, 32),
+                          kv_dtypes=("float32", "bfloat16", "int8"),
                           hw: HwSpec = V5E, smoke: bool = False) -> Dict:
     """Emit ONE tuned serving config for ``serve.ServeEngine``.
 
-    Scores every (token_budget × prefill_chunk × page_size) candidate on a
-    traffic-mix grid via ``roofline.mixed_bound`` (the parameter sweep is
-    analytic — no engine runs).  The criteria are pack tokens/s on the mix
-    points (prefill capped at what the engine can actually pack per tick)
-    PLUS the decode rate under the blend tick (1/tick_s — a decoding user's
-    inter-token gap is the tick, so this criterion pulls against unbounded
-    pack growth).  Returns::
+    Scores every (token_budget × prefill_chunk × page_size × kv_dtype)
+    candidate on a traffic-mix grid via ``roofline.mixed_bound`` (the
+    parameter sweep is analytic — no engine runs).  The ``kv_dtype`` axis
+    makes the tuned config pick the MEMORY REPRESENTATION too — the paper's
+    "set it once" now covers the decisive memory-mode knob: an int8 pool
+    streams roughly a quarter of the fp32 decode-side bytes, so on
+    memory-dominated mixes it lifts every criterion at once.  The criteria
+    are pack tokens/s on the mix points (prefill capped at what the engine
+    can actually pack per tick) PLUS the decode rate under the blend tick
+    (1/tick_s — a decoding user's inter-token gap is the tick, so this
+    criterion pulls against unbounded pack growth).  Returns::
 
-        {"best": {token_budget, prefill_chunk, page_size, score, ...},
+        {"best": {token_budget, prefill_chunk, page_size, kv_dtype,
+                  score, ...},
          "table": [per-candidate rows with per-criterion values/fractions]}
 
     ``score`` is the candidate's worst-case fraction of the per-criterion
@@ -132,23 +140,27 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
             if pc >= tb:
                 continue  # a chunk that fills the whole budget starves decode
             for ps in page_sizes:
-                tps = {}
-                for name, nd, npf, ctx in mix_points(tb, pc):
-                    r = mixed_bound(cfg, n_decode=nd, n_prefill=npf,
-                                    context_len=ctx, hw=hw, page_size=ps)
-                    tps[name] = r["tokens_per_s"]
-                    if name == "blend@doc":
-                        # a decoding user's inter-token gap IS the tick: the
-                        # latency criterion pulls AGAINST ever-bigger packs,
-                        # so max-min trades throughput off against p50 decode
-                        # latency under concurrent prefill (the PR 2 metric)
-                        tps["decode_rate@blend"] = 1.0 / max(r["tick_s"],
-                                                             1e-30)
-                rows.append({"token_budget": tb, "prefill_chunk": pc,
-                             "page_size": ps, "criteria": tps})
+                for kvd in kv_dtypes:
+                    tps = {}
+                    for name, nd, npf, ctx in mix_points(tb, pc):
+                        r = mixed_bound(cfg, n_decode=nd, n_prefill=npf,
+                                        context_len=ctx, hw=hw, page_size=ps,
+                                        kv_dtype=kvd)
+                        tps[name] = r["tokens_per_s"]
+                        if name == "blend@doc":
+                            # a decoding user's inter-token gap IS the tick:
+                            # the latency criterion pulls AGAINST ever-bigger
+                            # packs, so max-min trades throughput off against
+                            # p50 decode latency under concurrent prefill
+                            # (the PR 2 metric)
+                            tps["decode_rate@blend"] = 1.0 / max(r["tick_s"],
+                                                                 1e-30)
+                    rows.append({"token_budget": tb, "prefill_chunk": pc,
+                                 "page_size": ps, "kv_dtype": kvd,
+                                 "criteria": tps})
     if not rows:
-        raise ValueError("no valid (token_budget, prefill_chunk, page_size) "
-                         "candidate for the given grids")
+        raise ValueError("no valid (token_budget, prefill_chunk, page_size, "
+                         "kv_dtype) candidate for the given grids")
     peak = {name: max(r["criteria"][name] for r in rows)
             for name in rows[0]["criteria"]}
     for r in rows:
@@ -159,6 +171,6 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
         r["mean_fraction"] = sum(frac.values()) / len(frac)
     best = max(rows, key=lambda r: (r["score"], r["mean_fraction"]))
     return {"best": {k: best[k] for k in ("token_budget", "prefill_chunk",
-                                          "page_size", "score",
+                                          "page_size", "kv_dtype", "score",
                                           "mean_fraction")},
             "table": rows}

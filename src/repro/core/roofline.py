@@ -86,8 +86,26 @@ def roofline_terms(result: Dict, hw: HwSpec = V5E, cfg=None,
     }
 
 
+# the single source of truth for KV-pool storage costs (serve.engine sizes
+# its byte-denominated page budget from these same tables)
+KV_ITEMSIZE = {"float32": 4, "bfloat16": 2, "int8": 1}
+# int8 pools carry one float32 scale per pool entry per KV head
+KV_SCALE_BYTES = {"float32": 0, "bfloat16": 0, "int8": 4}
+
+
+def _kv_elem_bytes(kv_dtype, head_dim: int, act_bytes: float) -> float:
+    """Bytes one stored KV element costs under a pool representation,
+    including the amortized per-entry-per-head scale of int8 pools
+    (KV_SCALE_BYTES spread over ``head_dim`` elements).  ``kv_dtype=None``
+    follows the activation dtype — the unquantized pool."""
+    if kv_dtype is None:
+        return act_bytes
+    kvd = str(kv_dtype)
+    return KV_ITEMSIZE[kvd] + KV_SCALE_BYTES[kvd] / head_dim
+
+
 def decode_bound(cfg, batch: int, context_len: int, hw: HwSpec = V5E,
-                 page_size: int = None) -> Dict:
+                 page_size: int = None, kv_dtype=None) -> Dict:
     """Analytic tokens/s upper bound for one batched decode tick.
 
     The serving-engine analogue of the paper's practical-peak line: a decode
@@ -95,8 +113,13 @@ def decode_bound(cfg, batch: int, context_len: int, hw: HwSpec = V5E,
     and computes 2·N_active FLOPs per token plus the attention dot-products.
     ``page_size`` models the paged cache's read granularity (a slot's KV
     traffic rounds up to whole pages); windowed layers clamp their context
-    to the window.  benchmarks/serve_sweep.py scores measured engine
-    throughput against ``tokens_per_s`` from this bound.
+    to the window.  ``kv_dtype`` (None | "float32" | "bfloat16" | "int8")
+    makes the KV-byte term representation-aware: an int8 pool streams
+    ``1 + 4/hd`` bytes per element (values + amortized scales) instead of
+    the activation dtype's 2-4 — the decode side of serving is memory-bound
+    (the KNL follow-up's regime), so this term is usually the bound.
+    benchmarks/serve_sweep.py scores measured engine throughput against
+    ``tokens_per_s`` from this bound.
     """
     n_act = active_param_count(cfg)
     param_bytes = n_act * (2 if cfg.param_dtype == "bfloat16" else 4)
@@ -111,14 +134,18 @@ def decode_bound(cfg, batch: int, context_len: int, hw: HwSpec = V5E,
             a = blk.attn
             t_eff = context_len if a.window is None else min(a.window,
                                                              context_len)
-            if page_size and a.window is None:
-                # only global layers page; windowed layers keep dense
-                # per-slot circular buffers (see attention.init_paged_cache)
-                t_eff = -(-t_eff // page_size) * page_size
+            eb = act_bytes
+            if a.window is None:
+                # only global layers page (and quantize); windowed layers
+                # keep dense activation-dtype per-slot circular buffers
+                # (see attention.init_paged_cache)
+                if page_size:
+                    t_eff = -(-t_eff // page_size) * page_size
+                eb = _kv_elem_bytes(kv_dtype, a.head_dim, act_bytes)
             # qk^T + pv per query token, grouped heads
             flops += st.repeats * 4.0 * batch * t_eff * a.num_heads * a.head_dim
             kv_bytes += (st.repeats * 2.0 * batch * t_eff * a.num_kv_heads
-                         * a.head_dim * act_bytes)
+                         * a.head_dim * eb)
 
     t_comp = flops / hw.peak_flops
     t_mem = (param_bytes + kv_bytes) / hw.hbm_bw
@@ -134,7 +161,8 @@ def decode_bound(cfg, batch: int, context_len: int, hw: HwSpec = V5E,
 
 
 def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
-                hw: HwSpec = V5E, page_size: int = None) -> Dict:
+                hw: HwSpec = V5E, page_size: int = None,
+                kv_dtype=None) -> Dict:
     """Analytic bound for ONE ragged tick — the decode/prefill roofline blend.
 
     Scores a pack of ``n_decode`` decode tokens + ``n_prefill`` prefill-chunk
@@ -147,7 +175,14 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
     tokens attend over ~half the context on average and add their own KV
     writes.
 
-    Returns per-tick terms, ``tokens_per_s`` for the whole pack, and
+    ``kv_dtype`` makes the paged-pool byte terms representation-aware (see
+    ``decode_bound``): int8 streams ``1 + 4/hd`` bytes per stored element —
+    values plus amortized scales — on BOTH the decode-side reads and the
+    write side, which is what moves a memory-dominated tick's bound.
+
+    Returns per-tick terms, byte terms (``kv_read_bytes`` /
+    ``kv_write_bytes`` — the decode-side traffic the int8 pool halves or
+    better), ``tokens_per_s`` for the whole pack, and
     ``speedup_vs_two_phase`` — the bound-level ratio against running the
     same tokens as separate prefill + decode programs.  The serve sweep
     reports measured ragged throughput against this bound.
@@ -168,31 +203,36 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
                 a = blk.attn
                 t_eff = (context_len if a.window is None
                          else min(a.window, context_len))
-                if page_size and a.window is None:
-                    t_eff = -(-t_eff // page_size) * page_size
+                eb = act_bytes
+                if a.window is None:
+                    if page_size:
+                        t_eff = -(-t_eff // page_size) * page_size
+                    eb = _kv_elem_bytes(kv_dtype, a.head_dim, act_bytes)
                 # decode tokens see the whole context; prefill tokens see
                 # ~half of it on average (causal positions 0..ctx)
                 q_ctx = n_dec * t_eff + n_pre * t_eff / 2.0
                 flops += st.repeats * 4.0 * q_ctx * a.num_heads * a.head_dim
                 kv_read += (st.repeats * 2.0 * q_ctx * a.num_kv_heads
-                            * a.head_dim * act_bytes)
+                            * a.head_dim * eb)
                 kv_write += (st.repeats * 2.0 * toks * a.num_kv_heads
-                             * a.head_dim * act_bytes)
+                             * a.head_dim * eb)
         t_comp = flops / hw.peak_flops
         t_mem = (param_bytes + kv_read + kv_write) / hw.hbm_bw
-        return t_comp, t_mem, max(t_comp, t_mem, 1e-30)
+        return t_comp, t_mem, max(t_comp, t_mem, 1e-30), kv_read, kv_write
 
-    t_comp, t_mem, t = _tick(n_decode, n_prefill)
+    t_comp, t_mem, t, kv_read, kv_write = _tick(n_decode, n_prefill)
     # two-phase floor: the same tokens as a decode-only tick plus a
     # prefill-only tick, each paying its own parameter sweep
-    _, _, t_dec = _tick(n_decode, 0)
-    _, _, t_pre = _tick(0, n_prefill)
+    t_dec = _tick(n_decode, 0)[2]
+    t_pre = _tick(0, n_prefill)[2]
     two_phase = ((t_dec if n_decode else 0.0) + (t_pre if n_prefill else 0.0)
                  or 1e-30)
     return {
         "compute_s": t_comp,
         "memory_s": t_mem,
         "dominant": "compute" if t_comp >= t_mem else "memory",
+        "kv_read_bytes": kv_read,
+        "kv_write_bytes": kv_write,
         "tick_s": t,
         "tokens_per_s": total / t if total else 0.0,
         "speedup_vs_two_phase": two_phase / t,

@@ -9,6 +9,21 @@ EXPERIMENTS.md §Perf).
 
 Layouts: q (BH, S, hd); k, v (BKV, S, hd) with BH = B·kvH·G, BKV = B·kvH.
 Grid = (BH, nq, nk), K innermost.
+
+The two paged serving kernels (``paged_flash_decode``,
+``ragged_paged_flash``) additionally support **int8 quantized KV pools**:
+when the pool dtype is int8, per-entry-per-KV-head float32 scale pools
+(``ks``/``vs``, shape (n_pages, page, kvH)) ride in through the same
+block-table indirection, and each page tile is dequantized IN VMEM right
+after its DMA — ``k = int8_tile * scale_row`` feeding the unchanged fp32
+online-softmax accumulate.  HBM traffic per page is therefore the int8
+bytes plus one scale row (~hd/4× less than fp32 KV), never a dequantized
+copy — the serving analogue of the paper's point that keeping the working
+set in fast memory, not adding FLOPs, is what moves the bound.
+
+``interpret=None`` on every entry point resolves through
+``kernels.ops.default_interpret()``: compiled for real on TPU backends,
+interpret mode elsewhere (CPU CI), overridable via REPRO_PALLAS_INTERPRET.
 """
 from __future__ import annotations
 
@@ -18,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._interpret import default_interpret
 
 NEG_INF = -1e30
 
@@ -73,13 +90,19 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 # indexed KV pool.  The block table rides in as a scalar-prefetch argument so
 # the BlockSpec index_map can resolve page -> pool-row indirection before
 # each grid step's DMA — the kernel body itself never sees the indirection,
-# only a dense (page_size, hd) tile.  Grid = (B, kvH, n_pages_per_slot) with
-# the page dimension innermost (sequential online-softmax state in VMEM).
+# only a dense (page_size, hd) tile (plus, for int8 pools, its (page_size,)
+# scale row, dequantized here in VMEM).  Grid = (B, kvH, n_pages_per_slot)
+# with the page dimension innermost (sequential online-softmax state in
+# VMEM).
 
 
-def _paged_decode_kernel(ptab_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_ref, l_ref, acc_ref, *, page: int, npages: int,
-                         scale: float):
+def _paged_decode_kernel(ptab_ref, lens_ref, q_ref, k_ref, v_ref, *rest,
+                         page: int, npages: int, scale: float,
+                         quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b, ji = pl.program_id(0), pl.program_id(2)
 
     @pl.when(ji == 0)
@@ -94,6 +117,10 @@ def _paged_decode_kernel(ptab_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)  # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)  # (page, hd)
+        if quantized:  # fused dequant: int8 page tile × its scale row
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, page)
         cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(cols < n_valid, s, NEG_INF)
@@ -104,8 +131,7 @@ def _paged_decode_kernel(ptab_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         p = jnp.where(cols < n_valid, p, 0.0)
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-        acc_ref[...] = (acc_ref[...] * corr
-                        + jax.lax.dot(p, v_ref[0, :, 0].astype(jnp.float32)))
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(p, v)
         m_ref[...] = m_new
 
     @pl.when(ji == pl.num_programs(2) - 1)
@@ -114,8 +140,8 @@ def _paged_decode_kernel(ptab_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_flash_decode(q, kp, vp, ptab, lens, *, interpret: bool = True):
+def paged_flash_decode(q, kp, vp, ptab, lens, ks=None, vs=None, *,
+                       interpret=None):
     """Decode-step attention over a paged KV pool.
 
     q: (B, kvH, G, hd); kp, vp: (n_pages, page, kvH, hd);
@@ -123,25 +149,52 @@ def paged_flash_decode(q, kp, vp, ptab, lens, *, interpret: bool = True):
     lens: (B,) int32 valid entries per slot.  Returns (B, kvH, G, hd).
     Full (non-windowed) causal layers only — every written entry is visible
     to the single query token.
+
+    int8 pools: pass ``ks``/``vs`` ((n_pages, page, kvH) float32 scale
+    pools); the page tiles are dequantized in VMEM inside the online-softmax
+    loop, so the fp32 accumulate is unchanged while the page DMA moves ~4×
+    fewer bytes.
     """
+    # resolve OUTSIDE the jit boundary: a concrete bool is the static key,
+    # so a later REPRO_PALLAS_INTERPRET change retraces instead of silently
+    # reusing a cache entry keyed on None
+    if interpret is None:
+        interpret = default_interpret()
+    return _paged_flash_decode(q, kp, vp, ptab, lens, ks, vs,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_flash_decode(q, kp, vp, ptab, lens, ks, vs, *, interpret):
     B, kvH, G, hd = q.shape
     npages, page = kp.shape[0], kp.shape[1]
     pps = ptab.shape[1]
     scale = hd ** -0.5
+    quantized = ks is not None
 
     def _page_idx(b, h, j, ptab_ref, lens_ref):
         # unmapped sentinel pages clamp to a real pool row; their entries
         # are dead via the lens mask in the kernel body
         return (jnp.minimum(ptab_ref[b, j], npages - 1), 0, h, 0)
 
+    def _scale_idx(b, h, j, ptab_ref, lens_ref):
+        return (jnp.minimum(ptab_ref[b, j], npages - 1), 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd), lambda b, h, j, pt, ln: (b, h, 0, 0)),
+        pl.BlockSpec((1, page, 1, hd), _page_idx),
+        pl.BlockSpec((1, page, 1, hd), _page_idx),
+    ]
+    args = [ptab, lens, q, kp, vp]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page, 1), _scale_idx),
+                     pl.BlockSpec((1, page, 1), _scale_idx)]
+        args += [ks, vs]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, kvH, pps),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, pt, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, hd), _page_idx),
-            pl.BlockSpec((1, page, 1, hd), _page_idx),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda b, h, j, pt, ln: (b, h, 0, 0)),
         scratch_shapes=[
@@ -152,11 +205,11 @@ def paged_flash_decode(q, kp, vp, ptab, lens, *, interpret: bool = True):
     )
     return pl.pallas_call(
         functools.partial(_paged_decode_kernel, page=page, npages=npages,
-                          scale=scale),
+                          scale=scale, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, kvH, G, hd), q.dtype),
         interpret=interpret,
-    )(ptab, lens, q, kp, vp)
+    )(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -171,8 +224,12 @@ def paged_flash_decode(q, kp, vp, ptab, lens, *, interpret: bool = True):
 
 
 def _ragged_decode_kernel(slot_ref, lens_ref, ptab_ref, q_ref, k_ref, v_ref,
-                          o_ref, m_ref, l_ref, acc_ref, *, page: int,
-                          npages: int, scale: float):
+                          *rest, page: int, npages: int, scale: float,
+                          quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     t, ji = pl.program_id(0), pl.program_id(2)
 
     @pl.when(ji == 0)
@@ -190,6 +247,10 @@ def _ragged_decode_kernel(slot_ref, lens_ref, ptab_ref, q_ref, k_ref, v_ref,
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale  # (G, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)  # (page, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)  # (page, hd)
+        if quantized:  # fused dequant: int8 page tile × its scale row
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (G, page)
         cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(cols < n_valid, s, NEG_INF)
@@ -200,8 +261,7 @@ def _ragged_decode_kernel(slot_ref, lens_ref, ptab_ref, q_ref, k_ref, v_ref,
         p = jnp.where(cols < n_valid, p, 0.0)
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-        acc_ref[...] = (acc_ref[...] * corr
-                        + jax.lax.dot(p, v_ref[0, :, 0].astype(jnp.float32)))
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(p, v)
         m_ref[...] = m_new
 
     @pl.when(ji == pl.num_programs(2) - 1)
@@ -210,8 +270,8 @@ def _ragged_decode_kernel(slot_ref, lens_ref, ptab_ref, q_ref, k_ref, v_ref,
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def ragged_paged_flash(q, kp, vp, ptab, slot, lens, *, interpret: bool = True):
+def ragged_paged_flash(q, kp, vp, ptab, slot, lens, ks=None, vs=None, *,
+                       interpret=None):
     """Ragged-pack attention over a paged KV pool (one serving tick).
 
     q: (T, kvH, G, hd) — T pack tokens from arbitrary slots; slot: (T,)
@@ -225,25 +285,50 @@ def ragged_paged_flash(q, kp, vp, ptab, slot, lens, *, interpret: bool = True):
     above, so block-table rows of different slots aliasing the same pool
     page read the same bytes, and copy-on-write happens before the step in
     the allocator (a ``kernels.ops.copy_pages`` call), never in here.
+
+    int8 quantized pools require only the scale-row side channel: pass
+    ``ks``/``vs`` ((n_pages, page, kvH) float32) and each page tile is
+    dequantized in VMEM right after its DMA — aliased (prefix-shared) pages
+    alias their scale rows through the same indirection, so sharing, COW,
+    and quantization compose without further machinery.
     """
+    if interpret is None:  # resolve outside the jit boundary (see above)
+        interpret = default_interpret()
+    return _ragged_paged_flash(q, kp, vp, ptab, slot, lens, ks, vs,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _ragged_paged_flash(q, kp, vp, ptab, slot, lens, ks, vs, *, interpret):
     T, kvH, G, hd = q.shape
     npages, page = kp.shape[0], kp.shape[1]
     pps = ptab.shape[1]
     scale = hd ** -0.5
+    quantized = ks is not None
 
     def _page_idx(t, h, j, slot_ref, lens_ref, ptab_ref):
         # token -> slot -> page -> pool row; unmapped sentinel pages clamp
         # to a real row whose entries are dead via the lens cutoff
         return (jnp.minimum(ptab_ref[slot_ref[t], j], npages - 1), 0, h, 0)
 
+    def _scale_idx(t, h, j, slot_ref, lens_ref, ptab_ref):
+        return (jnp.minimum(ptab_ref[slot_ref[t], j], npages - 1), 0, h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd), lambda t, h, j, sl, ln, pt: (t, h, 0, 0)),
+        pl.BlockSpec((1, page, 1, hd), _page_idx),
+        pl.BlockSpec((1, page, 1, hd), _page_idx),
+    ]
+    args = [slot, lens, ptab, q, kp, vp]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page, 1), _scale_idx),
+                     pl.BlockSpec((1, page, 1), _scale_idx)]
+        args += [ks, vs]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(T, kvH, pps),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda t, h, j, sl, ln, pt: (t, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, hd), _page_idx),
-            pl.BlockSpec((1, page, 1, hd), _page_idx),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda t, h, j, sl, ln, pt: (t, h, 0, 0)),
         scratch_shapes=[
@@ -254,21 +339,28 @@ def ragged_paged_flash(q, kp, vp, ptab, slot, lens, *, interpret: bool = True):
     )
     return pl.pallas_call(
         functools.partial(_ragged_decode_kernel, page=page, npages=npages,
-                          scale=scale),
+                          scale=scale, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((T, kvH, G, hd), q.dtype),
         interpret=interpret,
-    )(slot, lens, ptab, q, kp, vp)
+    )(*args)
 
 
-@functools.partial(jax.jit, static_argnames=("bq", "bk", "window", "interpret"))
 def flash_attention(q, k, v, *, bq: int = 128, bk: int = 128, window=None,
-                    interpret: bool = True):
+                    interpret=None):
     """Causal flash attention.
 
     q: (BH, S, hd); k, v: (BKV, S, hd); BH must be a multiple of BKV
     (grouped queries).  Returns (BH, S, hd).
     """
+    if interpret is None:  # resolve outside the jit boundary (see above)
+        interpret = default_interpret()
+    return _flash_attention(q, k, v, bq=bq, bk=bk, window=window,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "window", "interpret"))
+def _flash_attention(q, k, v, *, bq, bk, window, interpret):
     BH, S, hd = q.shape
     BKV = k.shape[0]
     assert BH % BKV == 0

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._interpret import default_interpret
+
 
 def _kernel_vmem(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(pl.program_id(2) == 0)
@@ -44,11 +46,22 @@ def _kernel_hbm(a_ref, b_ref, o_ref, *, k_steps: int):
                           preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
+def matmul(a, b, *, block=(256, 256, 256), accum="vmem", interpret=None,
+           out_dtype=None):
+    """C = A·B with explicit VMEM tiling.  A: (M,K), B: (K,N).
+
+    ``interpret=None`` resolves through ``kernels.ops.default_interpret()``:
+    compiled on TPU backends, interpret mode elsewhere (resolved OUTSIDE the
+    jit boundary so a REPRO_PALLAS_INTERPRET change retraces)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _matmul(a, b, block=block, accum=accum, interpret=interpret,
+                   out_dtype=out_dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "accum", "interpret",
                                              "out_dtype"))
-def matmul(a, b, *, block=(256, 256, 256), accum="vmem", interpret=True,
-           out_dtype=None):
-    """C = A·B with explicit VMEM tiling.  A: (M,K), B: (K,N)."""
+def _matmul(a, b, *, block, accum, interpret, out_dtype):
     M, K = a.shape
     K2, N = b.shape
     assert K == K2, (a.shape, b.shape)

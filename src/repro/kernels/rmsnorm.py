@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._interpret import default_interpret
+
 
 def _kernel(x_ref, s_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -15,10 +17,21 @@ def _kernel(x_ref, s_ref, o_ref, *, eps: float):
                   * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
 def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
-            interpret: bool = True):
-    """x: (..., D); scale: (D,)."""
+            interpret=None):
+    """x: (..., D); scale: (D,).
+
+    ``interpret=None`` resolves through ``kernels.ops.default_interpret()``:
+    compiled on TPU backends, interpret mode elsewhere (resolved OUTSIDE the
+    jit boundary so a REPRO_PALLAS_INTERPRET change retraces)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                    interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def _rmsnorm(x, scale, *, eps, block_rows, interpret):
     shape = x.shape
     D = shape[-1]
     R = 1

@@ -41,6 +41,12 @@ def main(argv=None):
     ap.add_argument("--no-prefix-cache", action="store_true",
                     help="disable the refcounted prefix cache / COW pages "
                          "(sharing is auto-disabled for hybrid models)")
+    ap.add_argument("--kv-dtype", choices=("float32", "bfloat16", "int8"),
+                    default=None,
+                    help="paged KV pool storage dtype (default: activation "
+                         "dtype); int8 quantizes on write with per-entry-"
+                         "per-head scales and holds 2-4x the pages in the "
+                         "same pool bytes")
     args = ap.parse_args(argv)
 
     if skip_reason(args.arch, "decode_32k"):
@@ -59,7 +65,8 @@ def main(argv=None):
                              token_budget=args.token_budget,
                              ragged=args.engine == "ragged",
                              flash_decode=args.flash_decode,
-                             prefix_cache=not args.no_prefix_cache)
+                             prefix_cache=not args.no_prefix_cache,
+                             kv_dtype=args.kv_dtype)
     rng = np.random.RandomState(0)
     sample_kw = {}
     if args.engine != "reference" and args.temperature > 0:

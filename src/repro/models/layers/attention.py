@@ -215,8 +215,30 @@ def prefill_cache(params, cfg: AttnCfg, cache, x, positions):
 # preset by ``reset_paged_slots`` so the reused KV is visible immediately.
 
 
+# The pool's MEMORY REPRESENTATION is configurable (``kv_dtype``): float32 /
+# bfloat16 pools store KV verbatim; int8 pools store symmetric int8 values
+# plus one float32 scale per pool entry per KV head (``ks``/``vs``,
+# (n_pages, page, kvH)).  The lifecycle is write-quantize -> paged
+# read-dequant -> COW-with-scales: K/V rows are quantized ONCE as they are
+# scattered into the pool (``kernels.ops.kv_scatter_quantized``), every
+# reader (prefill chunks, decode ticks, prefix hits, the Pallas kernels)
+# dequantizes the same representation, and copy-on-write copies a page's
+# scale row with its values.  Quantizing at write time means a page is
+# byte-identical no matter which phase produced it — prefix hits on int8
+# pools are exact replays of the cold path.
+
+
+def kv_cache_dtype(kv_dtype, act_dtype):
+    """Resolve a ``kv_dtype`` spec (None | str | dtype) to a jnp dtype.
+    None means "follow the activation dtype" (the unquantized default)."""
+    if kv_dtype is None:
+        return jnp.dtype(act_dtype)
+    return jnp.dtype(kv_dtype)
+
+
 def init_paged_cache(cfg: AttnCfg, batch: int, cache_len: int, dtype, *,
-                     page_size: int, n_pages: int, window_extra: int = 0):
+                     page_size: int, n_pages: int, window_extra: int = 0,
+                     kv_dtype=None):
     """Paged (global) or per-slot circular (windowed) decode cache.
 
     ``window_extra`` over-provisions windowed buffers: a C-token chunk write
@@ -225,6 +247,13 @@ def init_paged_cache(cfg: AttnCfg, batch: int, cache_len: int, dtype, *,
     ``window + C - 1`` — callers doing C-token chunked prefill must pass
     ``window_extra = C - 1``.  Stale entries beyond the window stay masked
     via ``kpos``, so extra capacity never changes attention results.
+
+    ``kv_dtype`` (None | "float32" | "bfloat16" | "int8") sets the PAGED
+    pool's storage dtype; int8 pools add per-entry-per-head scale pools
+    ``ks``/``vs``.  Windowed circular buffers always store the activation
+    dtype — their footprint is bounded by the window, so quantizing them
+    buys little, and models with windowed layers serve with prefix sharing
+    off anyway.
     """
     kvH, hd = cfg.num_kv_heads, cfg.head_dim
     if cfg.window is not None:
@@ -235,14 +264,19 @@ def init_paged_cache(cfg: AttnCfg, batch: int, cache_len: int, dtype, *,
             "kpos": jnp.full((batch, cap), -1, jnp.int32),
             "slen": jnp.zeros((batch,), jnp.int32),
         }
+    kvd = kv_cache_dtype(kv_dtype, dtype)
     pps = -(-cache_len // page_size)  # block-table width (pages per slot)
-    return {
-        "kp": jnp.zeros((n_pages, page_size, kvH, hd), dtype),
-        "vp": jnp.zeros((n_pages, page_size, kvH, hd), dtype),
+    cache = {
+        "kp": jnp.zeros((n_pages, page_size, kvH, hd), kvd),
+        "vp": jnp.zeros((n_pages, page_size, kvH, hd), kvd),
         "ptab": jnp.full((batch, pps), n_pages, jnp.int32),
         "kpos": jnp.full((batch, pps * page_size), -1, jnp.int32),
         "slen": jnp.zeros((batch,), jnp.int32),
     }
+    if kvd == jnp.int8:
+        cache["ks"] = jnp.zeros((n_pages, page_size, kvH), jnp.float32)
+        cache["vs"] = jnp.zeros((n_pages, page_size, kvH), jnp.float32)
+    return cache
 
 
 def _paged_masked_attn(q, k, v, kpos, q_pos, window):
@@ -257,6 +291,42 @@ def _paged_masked_attn(q, k, v, kpos, q_pos, window):
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
     p = jnp.where(ok[:, None, None, :, :], p, 0.0)
     return jnp.einsum("bkgqt,btkd->bqkgd", p, v)
+
+
+def _scatter_paged_kv(cache, k_new, v_new, page, off):
+    """Scatter new K/V rows into the pool at (page, off) — the single write
+    path shared by the two-phase and ragged steps.  int8 pools quantize on
+    write (values + scale rows, ``kernels.ops.kv_scatter_quantized``); OOB
+    sentinel pages drop the write either way.  Mutates the caller's cache
+    dict (callers own a fresh copy)."""
+    from repro.kernels import ops as kops
+
+    if "ks" in cache:  # int8 pool: fused quantize-on-write
+        cache["kp"], cache["ks"] = kops.kv_scatter_quantized(
+            cache["kp"], cache["ks"], k_new, page, off)
+        cache["vp"], cache["vs"] = kops.kv_scatter_quantized(
+            cache["vp"], cache["vs"], v_new, page, off)
+    else:
+        cache["kp"] = cache["kp"].at[page, off].set(
+            k_new.astype(cache["kp"].dtype), mode="drop")
+        cache["vp"] = cache["vp"].at[page, off].set(
+            v_new.astype(cache["vp"].dtype), mode="drop")
+
+
+def _gather_paged_kv(cache, dtype):
+    """Gather the whole block-table context from the pool, dequantizing int8
+    pools against their per-entry scale rows (the jnp oracle of the fused
+    kernel path).  Returns (k, v) of shape (B, pps, P, kvH, hd) in ``dtype``.
+    """
+    k = jnp.take(cache["kp"], cache["ptab"], axis=0, mode="clip")
+    v = jnp.take(cache["vp"], cache["ptab"], axis=0, mode="clip")
+    if "ks" in cache:
+        from repro.kernels import ops as kops
+
+        ks = jnp.take(cache["ks"], cache["ptab"], axis=0, mode="clip")
+        vs = jnp.take(cache["vs"], cache["ptab"], axis=0, mode="clip")
+        return kops.dequantize_kv(k, ks, dtype), kops.dequantize_kv(v, vs, dtype)
+    return k.astype(dtype), v.astype(dtype)
 
 
 def paged_attention_step(params, cfg: AttnCfg, x, cache, q_pos, valid, *,
@@ -286,8 +356,7 @@ def paged_attention_step(params, cfg: AttnCfg, x, cache, q_pos, valid, *,
         page = jnp.take_along_axis(cache["ptab"], page_slot, axis=1)
         page = jnp.where(valid, page, n_pages)  # OOB -> scatter dropped
         off = q_pos % P
-        cache["kp"] = cache["kp"].at[page, off].set(k_new, mode="drop")
-        cache["vp"] = cache["vp"].at[page, off].set(v_new, mode="drop")
+        _scatter_paged_kv(cache, k_new, v_new, page, off)
         T = pps * P
         idx = jnp.where(valid, q_pos, T)
     else:
@@ -309,10 +378,11 @@ def paged_attention_step(params, cfg: AttnCfg, x, cache, q_pos, valid, *,
         from repro.kernels import ops as kops
 
         o = kops.paged_flash_decode(q[:, 0], cache["kp"], cache["vp"],
-                                    cache["ptab"], cache["slen"])[:, None]
+                                    cache["ptab"], cache["slen"],
+                                    ks=cache.get("ks"),
+                                    vs=cache.get("vs"))[:, None]
     elif paged:
-        k = jnp.take(cache["kp"], cache["ptab"], axis=0, mode="clip")
-        v = jnp.take(cache["vp"], cache["ptab"], axis=0, mode="clip")
+        k, v = _gather_paged_kv(cache, q.dtype)
         kvH, hd = cfg.num_kv_heads, cfg.head_dim
         k = k.reshape(B, T, kvH, hd)
         v = v.reshape(B, T, kvH, hd)
@@ -353,8 +423,7 @@ def ragged_attention_step(params, cfg: AttnCfg, x, cache, slot, q_pos, valid,
         page = cache["ptab"][slot, page_slot]  # (T,)
         page = jnp.where(valid, page, n_pages)  # OOB -> scatter dropped
         off = q_pos % P
-        cache["kp"] = cache["kp"].at[page, off].set(k_new, mode="drop")
-        cache["vp"] = cache["vp"].at[page, off].set(v_new, mode="drop")
+        _scatter_paged_kv(cache, k_new, v_new, page, off)
         Tc = pps * P
         idx = jnp.where(valid, q_pos, Tc)
     else:
@@ -379,12 +448,13 @@ def ragged_attention_step(params, cfg: AttnCfg, x, cache, slot, q_pos, valid,
 
         lens = jnp.where(valid, q_pos + 1, 0).astype(jnp.int32)
         o = kops.ragged_paged_flash(q, cache["kp"], cache["vp"],
-                                    cache["ptab"], slot, lens)[None]
+                                    cache["ptab"], slot, lens,
+                                    ks=cache.get("ks"),
+                                    vs=cache.get("vs"))[None]
         return _out_proj(params, cfg, o), cache
 
     if paged:
-        k_all = jnp.take(cache["kp"], cache["ptab"], axis=0, mode="clip")
-        v_all = jnp.take(cache["vp"], cache["ptab"], axis=0, mode="clip")
+        k_all, v_all = _gather_paged_kv(cache, q.dtype)
         kvH, hd = cfg.num_kv_heads, cfg.head_dim
         k_all = k_all.reshape(B, Tc, kvH, hd)
         v_all = v_all.reshape(B, Tc, kvH, hd)

@@ -144,12 +144,16 @@ def decode_step(params, cfg: ModelCfg, state, tokens_t, *,
 
 
 def init_paged_state(params, cfg: ModelCfg, batch: int, cache_len: int, *,
-                     page_size: int, n_pages: int,
-                     window_extra: int = 0) -> Dict:
+                     page_size: int, n_pages: int, window_extra: int = 0,
+                     kv_dtype=None) -> Dict:
     """Decode state for the paged serving engine: global-attention layers get
     block-table-indexed KV pools (``n_pages`` pages of ``page_size``),
     windowed layers per-slot circular buffers, recurrent mixers per-row
     states.  Every slot tracks its own position — no lock-step ``pos``.
+
+    ``kv_dtype`` (None | "float32" | "bfloat16" | "int8") selects the paged
+    pools' storage representation; int8 pools carry per-entry-per-head
+    scale pools (see ``attention.init_paged_cache``).
 
     ``window_extra`` must be ``prefill_chunk - 1`` when chunked prefill is
     used (see ``attention.init_paged_cache``)."""
@@ -158,7 +162,8 @@ def init_paged_state(params, cfg: ModelCfg, batch: int, cache_len: int, *,
     dt = jnp.dtype(cfg.dtype)
     states = [tfm.init_stage_state_paged(sp, cfg, st, batch, cache_len, dt,
                                          page_size=page_size, n_pages=n_pages,
-                                         window_extra=window_extra)
+                                         window_extra=window_extra,
+                                         kv_dtype=kv_dtype)
               for st, sp in zip(cfg.stages, params["stages"])]
     return {"layers": states}
 
@@ -206,6 +211,12 @@ def ragged_step(params, cfg: ModelCfg, state, tokens, slot, q_pos, seq_idx,
     logit_idx: (B,) index into the pack of each slot's sampled token (T ==
     no sample this tick; those rows return garbage logits the engine
     ignores).  Returns (logits (B, V), new state).
+
+    Callers must jit this with the state donated
+    (``serve_step.STATE_DONATE_ARGNUM``): the KV page pools (and, for int8
+    pools, their scale pools) plus the recurrent-state carries dominate the
+    pytree, and donation turns every tick's pool update into an in-place
+    scatter instead of a whole-pool copy.
     """
     dt = jnp.dtype(cfg.dtype)
     x = emb.embed_tokens(params["embed"], tokens[None], dt)  # (1,T,D)
@@ -266,6 +277,12 @@ def copy_kv_pages(cfg: ModelCfg, state, src, dst) -> Dict:
                 break
         if name in ("kp", "vp"):
             return kops.copy_pages(leaf, src, dst)
+        if name in ("ks", "vs"):
+            # int8 pools: a page's scale row travels with its values — a
+            # COW'd page dequantized against the wrong scales would corrupt
+            # the shared prefix (scale pools have no trailing head dim, so
+            # the page axis sits at ndim-3)
+            return kops.copy_pages(leaf, src, dst, axis=leaf.ndim - 3)
         return leaf
 
     return jax.tree_util.tree_map_with_path(leaf_copy, state)

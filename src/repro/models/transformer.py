@@ -226,11 +226,13 @@ def init_stage_state(params, cfg: ModelCfg, stage: Stage, batch: int,
 
 def init_block_state_paged(params, cfg: ModelCfg, blk: BlockCfg, batch: int,
                            cache_len: int, dtype, *, page_size: int,
-                           n_pages: int, window_extra: int = 0):
+                           n_pages: int, window_extra: int = 0,
+                           kv_dtype=None):
     if blk.mixer == "attn":
         return attn.init_paged_cache(blk.attn, batch, cache_len, dtype,
                                      page_size=page_size, n_pages=n_pages,
-                                     window_extra=window_extra)
+                                     window_extra=window_extra,
+                                     kv_dtype=kv_dtype)
     if blk.mixer == "cross_attn":
         raise NotImplementedError("paged serving covers token models only")
     if blk.mixer == "mamba":
@@ -242,11 +244,13 @@ def init_block_state_paged(params, cfg: ModelCfg, blk: BlockCfg, batch: int,
 
 def init_stage_state_paged(params, cfg: ModelCfg, stage: Stage, batch: int,
                            cache_len: int, dtype, *, page_size: int,
-                           n_pages: int, window_extra: int = 0):
+                           n_pages: int, window_extra: int = 0,
+                           kv_dtype=None):
     mk = lambda: [init_block_state_paged(None, cfg, blk, batch, cache_len,
                                          dtype, page_size=page_size,
                                          n_pages=n_pages,
-                                         window_extra=window_extra)
+                                         window_extra=window_extra,
+                                         kv_dtype=kv_dtype)
                   for blk in stage.pattern]
     if stage.repeats == 1:
         return mk()
@@ -427,7 +431,10 @@ def reset_stage_slots(stage: Stage, states, init_states, mask, ptab_rows,
     for s_blk, i_blk in zip(states, init_states):
         new = {}
         for name, leaf in s_blk.items():
-            if name in ("kp", "vp"):
+            # shared pool leaves survive slot churn: KV pages AND their
+            # int8 scale rows (a reset must never zero scales a prefix-
+            # cached page still dequantizes against)
+            if name in ("kp", "vp", "ks", "vs"):
                 new[name] = leaf
                 continue
             m = mask.reshape((1,) * lead + (-1,) + (1,) * (leaf.ndim - lead - 1))

@@ -16,12 +16,28 @@ that lesson to serving:
   single jit'd ``(T,)`` ragged step (``serve_step.make_ragged_step``) with
   per-token (slot, position, validity) vectors.  The mix is pure data, so
   exactly ONE program is ever traced (``stats["traces"]``).
-- **One resident working set** (this PR): thousands of requests sharing a
+- **One resident working set** (PR 3): thousands of requests sharing a
   system-prompt prefix are the serving analogue of the paper's "millions of
   users" hitting the same data — so the paged KV pool is a shared,
   refcounted cache rather than scratch space.  The "all2all cache mode" of
   the engine: the shared prefix stays resident and every request reads it
   from the pool instead of re-prefilling it.
+- **Half-or-better bytes per resident token** (this PR): the pool's memory
+  REPRESENTATION is a knob (``kv_dtype``: float32 | bfloat16 | int8; the
+  default follows the activation dtype).  An int8 pool stores symmetric
+  int8 K/V plus one f32 scale per pool entry per KV head, and its lifecycle
+  is **write-quantize → paged read-dequant → COW-with-scales**: rows are
+  quantized exactly once, as the serve step scatters them into the pool
+  (``kernels.ops.kv_scatter_quantized``); every reader — prefill chunks,
+  decode ticks, prefix hits, the fused-dequant Pallas kernels — dequantizes
+  the same stored bytes; and copy-on-write copies a page's scale row with
+  its values (``kernels.ops.copy_pages``).  Because the page budget is
+  really a BYTE budget, int8 holds 2-4× the pages in the same bytes: more
+  concurrent decoders admitted and more refcount-0 prefix pages resident
+  before eviction.  This is the memory-mode half of the paper's result
+  applied twice over — the decode path streams ~¼ the KV bytes per token
+  (the bandwidth-bound term of `core.roofline.mixed_bound`), AND the
+  working set that must stay resident shrinks to match.
 
 Prefix-cache lifecycle (host-side; the device only ever sees block tables):
 
@@ -72,12 +88,41 @@ from collections import deque
 from typing import Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelCfg
 from repro.models import model as M
 from repro.serve.reference import Request
-from repro.serve.serve_step import make_ragged_step
+from repro.serve.serve_step import STATE_DONATE_ARGNUM, make_ragged_step
+
+from repro.core.roofline import KV_ITEMSIZE, KV_SCALE_BYTES
+
+
+def kv_page_bytes(cfg: ModelCfg, page_size: int, kv_dtype: str) -> int:
+    """Bytes one pool page costs across ALL paged (global-attention) layers
+    for a given storage dtype — K and V values plus, for int8, their scale
+    rows.  The engine sizes its page budget with this: a pool budget is a
+    BYTE budget, and int8 fits ~``4·hd/(hd+4)``× the pages of float32 in
+    the same bytes (≈3.8× at hd=64, ≥2× for hd ≥ 4; 3.2× on the smoke
+    model's hd=16)."""
+    isize = KV_ITEMSIZE[kv_dtype]
+    sbytes = KV_SCALE_BYTES[kv_dtype]
+    total = 0
+    for st in cfg.stages:
+        for blk in st.pattern:
+            if blk.mixer == "attn" and blk.attn.window is None:
+                kvH, hd = blk.attn.num_kv_heads, blk.attn.head_dim
+                total += st.repeats * 2 * page_size * kvH * (hd * isize
+                                                             + sbytes)
+    return total
+
+
+def kv_bytes_per_token(cfg: ModelCfg, kv_dtype: str) -> int:
+    """Bytes of paged-pool KV one token occupies (and one decode step must
+    stream per context token) across all global-attention layers — the
+    quantity the int8 pool halves-or-better vs float32."""
+    return kv_page_bytes(cfg, 1, kv_dtype)
 
 
 @dataclasses.dataclass
@@ -121,7 +166,7 @@ class ServeEngine:
                  max_pages: Optional[int] = None, prefill_chunk: int = 32,
                  token_budget: int = 128, greedy: bool = True,
                  ragged: bool = True, flash_decode: bool = False,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, kv_dtype: Optional[str] = None):
         self.params = params
         self.cfg = cfg
         self.B = batch_size
@@ -131,6 +176,14 @@ class ServeEngine:
         self.budget = token_budget
         self.greedy = greedy
         self.ragged = ragged
+        # paged-pool storage representation: None follows the activation
+        # dtype (the unquantized default); "int8" is the headline — half-or-
+        # better bytes per resident token, quantized at KV-write time so
+        # prefill, decode, prefix hits, and COW all share one representation
+        self.kv_dtype = str(jnp.dtype(kv_dtype or cfg.dtype))
+        if self.kv_dtype not in KV_ITEMSIZE:
+            raise ValueError(f"unsupported kv_dtype {self.kv_dtype!r} "
+                             f"(pick from {sorted(KV_ITEMSIZE)})")
         if ragged and token_budget < batch_size:
             raise ValueError(
                 f"token_budget={token_budget} < batch_size={batch_size}: "
@@ -145,8 +198,24 @@ class ServeEngine:
         self.prefix_cache = bool(prefix_cache) and self._has_paged and all(
             blk.mixer == "attn" and blk.attn.window is None
             for st in cfg.stages for blk in st.pattern)
-        self.n_pages = (max_pages if max_pages is not None
-                        else batch_size * self.pps)
+        # the page budget is a BYTE budget: the default pool spends the same
+        # bytes the unquantized (activation-dtype) pool would, so an int8
+        # pool holds ~2-4× the pages — more concurrent requests and more
+        # refcount-0 prefix-cache pages stay resident before eviction (the
+        # serving analogue of fitting the working set into fast memory).
+        # Floor: never BELOW the worst-case base_pages — a widening kv_dtype
+        # (e.g. a float32 pool on a bfloat16 model) keeps every slot
+        # admissible without queueing, at the cost of exceeding the
+        # activation-dtype byte budget (visible in stats["kv_pool_bytes"])
+        base_pages = batch_size * self.pps
+        if max_pages is not None:
+            self.n_pages = max_pages
+        elif self._has_paged:
+            ref = kv_page_bytes(cfg, page_size, str(jnp.dtype(cfg.dtype)))
+            act = kv_page_bytes(cfg, page_size, self.kv_dtype)
+            self.n_pages = max(base_pages, base_pages * ref // max(act, 1))
+        else:
+            self.n_pages = base_pages
         self._free: List[int] = list(range(self.n_pages))
         self._ref = np.zeros(self.n_pages, np.int64)  # per-page refcounts
         self._root = _PrefixNode(None, -1, None)  # trie of cached prefixes
@@ -162,7 +231,15 @@ class ServeEngine:
                       "ticks": 0, "packed_tokens": 0, "traces": 0,
                       "pages_in_use_peak": 0, "admissions": 0,
                       "prefix_hits": 0, "prefix_tokens_reused": 0,
-                      "cow_copies": 0, "evictions": 0}
+                      "cow_copies": 0, "evictions": 0,
+                      # memory-representation accounting: bytes of paged KV
+                      # one token occupies (streams per context token at
+                      # decode) and the pool's byte footprint at this dtype
+                      "kv_dtype": self.kv_dtype,
+                      "kv_bytes_per_token": kv_bytes_per_token(
+                          cfg, self.kv_dtype),
+                      "kv_pool_bytes": self.n_pages * kv_page_bytes(
+                          cfg, page_size, self.kv_dtype)}
         # per-token / per-tick logs for the latency benchmark:
         # token_log rows are (uid, tick index, wall time); tick_log rows are
         # (had outstanding prefill at tick start, wall time at tick end)
@@ -175,16 +252,20 @@ class ServeEngine:
                 return fn(*a)
             return wrapper
 
-        # donate the state: the page pools dominate the pytree and must be
-        # updated in place, not copied, on every tick of the hot loop
+        # donate the state (serve_step.STATE_DONATE_ARGNUM): the KV page
+        # pools, int8 scale pools, and recurrent-state carries dominate the
+        # pytree and must be updated in place, not copied, on every tick of
+        # the hot loop (no-copy contract asserted by pointer identity in
+        # tests/test_kv_quant.py)
+        donate = (STATE_DONATE_ARGNUM,)
         self._ragged_step = jax.jit(
             _count_traces(make_ragged_step(
                 cfg, width=prefill_chunk + 1, flash_decode=flash_decode)),
-            donate_argnums=(1,))
+            donate_argnums=donate)
         step = lambda wl: (lambda p, s, t, qp, v: M.paged_step(
             p, cfg, s, t, qp, v, with_logits=wl, flash_decode=flash_decode))
-        self._chunk_step = jax.jit(step(False), donate_argnums=(1,))
-        self._decode_step = jax.jit(step(True), donate_argnums=(1,))
+        self._chunk_step = jax.jit(step(False), donate_argnums=donate)
+        self._decode_step = jax.jit(step(True), donate_argnums=donate)
         # control-plane programs (admission reset, COW page copy) — separate
         # from the serve path, each traced at most once
         self._reset = jax.jit(
@@ -618,7 +699,7 @@ class ServeEngine:
             self._state = M.init_paged_state(
                 self.params, self.cfg, self.B, self.cache_len,
                 page_size=self.page_size, n_pages=self.n_pages,
-                window_extra=self.chunk)
+                window_extra=self.chunk, kv_dtype=self.kv_dtype)
             # the reset template must not alias the (donated) live state
             self._template = jax.tree.map(jax.numpy.copy, self._state)
 

@@ -39,6 +39,11 @@ from repro.models import model as M
 from repro.parallel.sharding import logical_spec
 
 
+# argnum of the decode-state pytree in every step builder's signature: jit
+# with ``donate_argnums=(STATE_DONATE_ARGNUM,)`` so the pools update in place
+STATE_DONATE_ARGNUM = 1
+
+
 def make_serve_step(cfg: ModelCfg, *, sp_decode: bool = False):
     def serve_step(params, state, tokens_t):
         return M.decode_step(params, cfg, state, tokens_t, sp_decode=sp_decode)
@@ -51,8 +56,13 @@ def make_ragged_step(cfg: ModelCfg, *, width: int, flash_decode: bool = False):
 
     Returns ``f(params, state, tokens, slot, q_pos, seq_idx, valid,
     logit_idx) -> (logits (B, V), new_state)`` with all pack vectors (T,)
-    and ``logit_idx`` (B,).  Jit it with ``donate_argnums=(1,)`` — the page
-    pools dominate the state pytree and must be updated in place.
+    and ``logit_idx`` (B,).  Jit it with ``donate_argnums=(1,)``
+    (``STATE_DONATE_ARGNUM``) — the KV page pools, their int8 scale pools,
+    and the recurrent-state carries dominate the state pytree, and donation
+    lets XLA scatter the tick's new entries into the existing buffers
+    instead of copying the whole pool every tick (the hot-loop no-copy
+    contract; asserted by buffer-pointer identity in tests/test_kv_quant.py
+    on backends that support donation).
     """
 
     def ragged_step(params, state, tokens, slot, q_pos, seq_idx, valid,
@@ -73,9 +83,12 @@ STATE_AXES: Dict[str, tuple] = {
     "k_pos": ("act_kv_seq",),
     "pos": (),
     # paged KV (per-slot engine): page pools shard over KV heads; block
-    # tables / positions are per-slot and follow the batch axis
+    # tables / positions are per-slot and follow the batch axis.  int8
+    # pools add per-entry scale pools (ks/vs) that shard with their pages.
     "kp": (None, None, "act_kv_heads", None),
     "vp": (None, None, "act_kv_heads", None),
+    "ks": (None, None, "act_kv_heads"),
+    "vs": (None, None, "act_kv_heads"),
     "ptab": ("act_kv_batch", None),
     "kpos": ("act_kv_batch", None),
     "slen": ("act_kv_batch",),

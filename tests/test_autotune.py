@@ -28,8 +28,9 @@ print("OK", out["best"]["candidate"], out["best"]["dominant"])
 
 def test_select_serve_defaults_emits_one_config():
     """The serving-time analogue of the paper's tuned-once config: the sweep
-    emits exactly one (token_budget, prefill_chunk, page_size) whose worst
-    traffic-mix point is the best worst-case across the grid."""
+    emits exactly one (token_budget, prefill_chunk, page_size, kv_dtype)
+    whose worst traffic-mix point is the best worst-case across the grid —
+    ONE config that now also picks the memory representation."""
     from repro.core.autotune import select_serve_defaults
 
     out = select_serve_defaults("qwen2-1.5b", smoke=True, context_len=100)
@@ -37,10 +38,11 @@ def test_select_serve_defaults_emits_one_config():
     assert best["token_budget"] in (64, 128, 256)
     assert best["prefill_chunk"] in (16, 32, 64)
     assert best["page_size"] in (8, 16, 32)
+    assert best["kv_dtype"] in ("float32", "bfloat16", "int8")
     assert 0.0 < best["score"] <= 1.0
     # full grid evaluated (chunks must leave decode room in the budget)
     n_valid = sum(1 for tb in (64, 128, 256) for pc in (16, 32, 64)
-                  if pc < tb) * 3
+                  if pc < tb) * 3 * 3
     assert len(table) == n_valid
     # max-min selection: nobody beats the winner's worst-case fraction
     assert all(r["score"] <= best["score"] + 1e-12 for r in table)

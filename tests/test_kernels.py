@@ -187,6 +187,38 @@ def test_ragged_paged_flash_allclose(page, pps):
     assert not bool(jnp.isnan(got).any())
 
 
+@pytest.mark.parametrize("kernel", ["paged", "ragged"])
+def test_flash_kernels_fused_dequant_match_fp32_pool(kernel):
+    """int8 pools: the fused in-VMEM dequant (int8 tile × scale row inside
+    the online-softmax loop) must match running the same kernel on the
+    dequantized fp32 pool to float tolerance — quantization changes WHERE
+    the bytes expand, not the math."""
+    B, kvH, G, hd, page, pps = 2, 2, 4, 16, 8, 3
+    npages = B * pps
+    kp_f = jax.random.normal(jax.random.PRNGKey(1), (npages, page, kvH, hd))
+    vp_f = jax.random.normal(jax.random.PRNGKey(2), (npages, page, kvH, hd))
+    kp8, ks = ops.quantize_kv(kp_f)
+    vp8, vs = ops.quantize_kv(vp_f)
+    kp_dq = ops.dequantize_kv(kp8, ks)
+    vp_dq = ops.dequantize_kv(vp8, vs)
+    ptab = jnp.asarray(np.arange(npages).reshape(B, pps), jnp.int32)
+    if kernel == "paged":
+        q = jax.random.normal(KEY, (B, kvH, G, hd))
+        lens = jnp.asarray([pps * page, page + 3], jnp.int32)
+        got = ops.paged_flash_decode(q, kp8, vp8, ptab, lens, ks=ks, vs=vs)
+        want = ops.paged_flash_decode(q, kp_dq, vp_dq, ptab, lens)
+    else:
+        T = 5
+        q = jax.random.normal(KEY, (T, kvH, G, hd))
+        slot = jnp.asarray([0, 1, 0, 1, 0], jnp.int32)
+        lens = jnp.asarray([1, page, pps * page, 0, page + 2], jnp.int32)
+        got = ops.ragged_paged_flash(q, kp8, vp8, ptab, slot, lens,
+                                     ks=ks, vs=vs)
+        want = ops.ragged_paged_flash(q, kp_dq, vp_dq, ptab, slot, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # rmsnorm
 
