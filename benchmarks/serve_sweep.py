@@ -32,11 +32,25 @@ analogue sweeps (concurrent users × prompt-length mix × page size) through
   p50 decode gap + max-resident-pages per arm), plus a warm-prefix pass
   on the int8 pool (hits must stay token-identical to the int8 cold path
   — quantize-at-write means a cached page replays exactly).
+- **scheduler A/B (fifo vs prefix-aware vs slo)** — the pluggable-policy
+  experiment on mixed shared-prefix Poisson traffic: three document
+  families (long shared prefix each, batch class) interleaved with
+  interactive chats, through a page pool deliberately too small to keep
+  every family's prefix resident.  FIFO's arrival order ping-pongs the
+  cache between families (evictions, cold re-prefill); the prefix-aware
+  window groups each family into the same admission wave so its prefix is
+  reused while resident; the slo policy admits and packs the interactive
+  class first.  Reports per policy: tokens/s, prefix tokens reused,
+  evictions, packed tokens, and p50/p99 interactive token latency (mean
+  wall time per emitted token since submit, per interactive request — the
+  queue-jump metric).  CI gates prefix-aware ≥ fifo tokens/s and slo p50
+  interactive latency ≤ fifo.
 
 The JSON payload also records ``tuned_serving_config`` — the single
-(token_budget, prefill_chunk, page_size, kv_dtype) point that
+(token_budget, prefill_chunk, page_size, kv_dtype, scheduler) point that
 ``core.autotune.select_serve_defaults`` picks from the analytic roofline
-sweep ("set it once system-wide", memory representation included).
+sweep ("set it once system-wide", memory representation and scheduling
+policy included).
 
   PYTHONPATH=src python benchmarks/serve_sweep.py [--arch qwen2-1.5b]
       [--users 4 16] [--page-sizes 8 32] [--max-tokens 8] [--no-baseline]
@@ -215,6 +229,128 @@ def prefix_scenario(cfg, params, *, cache_len: int, n_requests: int = 12,
             "token_identical": bool(identical)}
 
 
+def scheduler_ab_scenario(cfg, params, *, cache_len: int = 256,
+                          n_families: int = 3, family_size: int = 4,
+                          n_chats: int = 6, rate: float = 1.2,
+                          seed: int = 19, warm: bool = True):
+    """fifo vs prefix-aware vs slo on mixed shared-prefix Poisson traffic.
+
+    Traffic: ``n_families`` document families — one long shared prefix (10
+    full pages) plus a short unique suffix per request, batch class
+    (priority 0, ``max_tokens=4``) — interleaved round-robin so consecutive
+    arrivals belong to DIFFERENT families, plus ``n_chats`` interactive
+    chats (6-token prompts, priority 1, ``max_tokens=3``) spread through
+    the stream.  Arrivals are Poisson (``rate`` requests/tick) driven
+    through ``ServeEngine.tick``.  The page pool is sized so roughly half
+    the family prefixes fit at once: under FIFO the interleaved families
+    evict each other's cached prefix before the next sibling arrives
+    (cold re-prefill every time), the prefix-aware window groups a family
+    into consecutive admissions so its prefix is reused while resident,
+    and slo admits/packs the interactive class first.
+
+    Interactive token latency is the queue-jump metric: per interactive
+    request, (last token wall time - submit wall time) / tokens emitted —
+    time-to-first-token and inter-token gaps folded into one number that a
+    policy can only improve by actually admitting the chat sooner.
+
+    Returns {"fifo": {...}, "prefix-aware": {...}, "slo": {...},
+    "prefix_aware_speedup", "slo_p50_latency_ratio", "token_identical"}.
+    """
+    rng = np.random.RandomState(seed)
+    page = 16
+    prefix_pages = 10
+    fams = [rng.randint(0, cfg.vocab_size, prefix_pages * page)
+            for _ in range(n_families)]
+    docs = [(f, np.concatenate([fams[f],
+                                rng.randint(0, cfg.vocab_size,
+                                            rng.randint(5, 9))]))
+            for _ in range(family_size) for f in range(n_families)]
+    chats = [rng.randint(0, cfg.vocab_size, 6) for _ in range(n_chats)]
+    # interleave: after every len(fams) docs (one per family), one chat
+    stream = []
+    di = ci = 0
+    while di < len(docs) or ci < len(chats):
+        for _ in range(n_families):
+            if di < len(docs):
+                stream.append(("doc", docs[di][1]))
+                di += 1
+        if ci < len(chats):
+            stream.append(("chat", chats[ci]))
+            ci += 1
+    arrive_tick = np.floor(np.cumsum(
+        rng.exponential(1.0 / rate, size=len(stream)))).astype(int)
+    # pool: one live wave (2 slots × 11-page doc footprint) plus ~ONE cached
+    # family prefix — too small for every family to stay resident
+    max_pages = 2 * (prefix_pages + 1) + 2
+
+    out = {}
+    outputs = {}
+    for sched in ("fifo", "prefix-aware", "slo"):
+        eng = ServeEngine(params, cfg, batch_size=2, cache_len=cache_len,
+                          page_size=page, prefill_chunk=32, token_budget=128,
+                          max_pages=max_pages, scheduler=sched)
+        if warm:  # compile outside the measurement, then forget the pages
+            eng.submit(rng.randint(0, cfg.vocab_size, 20), max_tokens=2)
+            eng.run()
+            eng.drop_prefix_cache()
+        before = dict(eng.stats)
+        skip = len(eng.token_log)
+        submit_t = {}
+        kinds = {}
+        done = {}
+        uids = []
+        i, tick = 0, 0
+        t0 = time.perf_counter()
+        while i < len(stream) or not eng.idle:
+            while i < len(stream) and arrive_tick[i] <= tick:
+                kind, prompt = stream[i]
+                h = eng.submit(prompt,
+                               max_tokens=3 if kind == "chat" else 4,
+                               priority=1 if kind == "chat" else 0)
+                submit_t[int(h)] = time.perf_counter()
+                kinds[int(h)] = kind
+                uids.append(int(h))
+                i += 1
+            done.update(eng.tick())
+            tick += 1
+            assert tick < 100_000, "scheduler scenario failed to drain"
+        dt = time.perf_counter() - t0
+        n_tok = sum(len(done[u]) for u in uids)
+        # per-interactive-request mean wall time per emitted token, from
+        # submit (admission wait + prefill + decode gaps in one number)
+        last_t = {}
+        n_seen = {}
+        for uid, _, t in eng.token_log[skip:]:
+            last_t[uid] = t
+            n_seen[uid] = n_seen.get(uid, 0) + 1
+        lat = [(last_t[u] - submit_t[u]) / n_seen[u] * 1e3
+               for u in uids if kinds[u] == "chat"]
+        outputs[sched] = [done[u] for u in uids]
+        out[sched] = {
+            "tokens_per_s": n_tok / dt,
+            "p50_interactive_ms": float(np.percentile(lat, 50)),
+            "p99_interactive_ms": float(np.percentile(lat, 99)),
+            "packed_tokens": eng.stats["packed_tokens"]
+                             - before["packed_tokens"],
+            "prefix_tokens_reused": eng.stats["prefix_tokens_reused"]
+                                    - before["prefix_tokens_reused"],
+            "evictions": eng.stats["evictions"] - before["evictions"],
+            "prefix_hits": eng.stats["prefix_hits"] - before["prefix_hits"],
+            "ticks": eng.stats["ticks"] - before["ticks"],
+            "traces": eng.stats["traces"],
+        }
+    # greedy outputs are schedule-invariant: a request's tokens depend only
+    # on its prompt (prefix reuse is exact), never on admission order
+    identical = (outputs["fifo"] == outputs["prefix-aware"]
+                 == outputs["slo"])
+    return {**out,
+            "prefix_aware_speedup": (out["prefix-aware"]["tokens_per_s"]
+                                     / out["fifo"]["tokens_per_s"]),
+            "slo_p50_latency_ratio": (out["slo"]["p50_interactive_ms"]
+                                      / out["fifo"]["p50_interactive_ms"]),
+            "token_identical": bool(identical)}
+
+
 def kv_ab_scenario(cfg, params, *, cache_len: int = 64, batch_size: int = 8,
                    page_size: int = 8, seed: int = 17, warm: bool = True):
     """fp32-vs-int8 paged-pool A/B at a FIXED page-pool byte budget.
@@ -371,6 +507,22 @@ def sweep(arch: str, users, page_sizes, max_tokens: int, cache_len: int,
     rows.append((f"serve/{arch}/prefix/speedup", pre["speedup"],
                  "x-over-no-sharing,token_identical="
                  + str(pre["token_identical"]).lower()))
+    sched_ab = scheduler_ab_scenario(cfg, params,
+                                     cache_len=max(cache_len, 256),
+                                     warm=warm)
+    for sched in ("fifo", "prefix-aware", "slo"):
+        r = sched_ab[sched]
+        rows.append((f"serve/{arch}/scheduler/{sched}", r["tokens_per_s"],
+                     f"p50_interactive_ms={r['p50_interactive_ms']:.1f},"
+                     f"reused={r['prefix_tokens_reused']},"
+                     f"evictions={r['evictions']}"))
+    rows.append((f"serve/{arch}/scheduler/prefix-aware-speedup",
+                 sched_ab["prefix_aware_speedup"],
+                 "x-over-fifo-tokens-per-s,token_identical="
+                 + str(sched_ab["token_identical"]).lower()))
+    rows.append((f"serve/{arch}/scheduler/slo-p50-ratio",
+                 sched_ab["slo_p50_latency_ratio"],
+                 "x-fifo-p50-interactive-latency"))
     kv_ab = kv_ab_scenario(cfg, params, warm=warm)
     for p in kv_ab["points"]:
         for arm in ("fp32", "int8"):
@@ -385,7 +537,7 @@ def sweep(arch: str, users, page_sizes, max_tokens: int, cache_len: int,
             f"/max_tokens={p['max_tokens']}", p["speedup"],
             f"x-int8-over-fp32-at-equal-bytes,"
             f"top1_agreement={p['top1_agreement']:.3f}"))
-    return rows, lat, pre, kv_ab
+    return rows, lat, pre, kv_ab, sched_ab
 
 
 def main(argv=None):
@@ -405,10 +557,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.smoke:
         args.users, args.page_sizes, args.max_tokens = [4], [8], 4
-    rows, lat, pre, kv_ab = sweep(args.arch, args.users, args.page_sizes,
-                                  args.max_tokens, args.cache_len,
-                                  baseline=not args.no_baseline,
-                                  warm=not args.cold)
+    rows, lat, pre, kv_ab, sched_ab = sweep(
+        args.arch, args.users, args.page_sizes, args.max_tokens,
+        args.cache_len, baseline=not args.no_baseline, warm=not args.cold)
     print("name,tokens_per_s,derived")
     for name, tps, derived in rows:
         print(f"{name},{tps:.1f},{derived}", flush=True)
@@ -425,6 +576,7 @@ def main(argv=None):
             "latency_under_concurrent_prefill": lat,
             "prefix_scenario": pre,
             "kv_dtype_ab": kv_ab,
+            "scheduler_ab": sched_ab,
             "tuned_serving_config": select_serve_defaults(
                 args.arch, smoke=True)["best"],
         }

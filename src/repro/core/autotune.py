@@ -70,16 +70,35 @@ def select_defaults(arch: str, shape_name: str, mesh, **kw) -> Dict:
 
 # ---------------------------------------------------------------------------
 # Serving-time autotune: ONE (token_budget, prefill_chunk, page_size,
-# kv_dtype) for all traffic — the paper's "set it once system-wide, every
-# grid point stays near peak" claim at serving time, now including the
-# memory representation (the analogue of the paper's decisive cache-mode
-# setting).  Instead of per-workload retuning, we sweep
-# the serving knobs against the analytic roofline blend
+# kv_dtype, scheduler) for all traffic — the paper's "set it once
+# system-wide, every grid point stays near peak" claim at serving time,
+# covering the memory representation (the analogue of the paper's decisive
+# cache-mode setting) AND, since the scheduling layer became pluggable
+# (serve.scheduler), the workload policy.  Instead of per-workload
+# retuning, we sweep the serving knobs against the analytic roofline blend
 # (core.roofline.mixed_bound) over a traffic-mix grid (decode-heavy steady
 # state, a chat/doc blend, a prefill burst — each at a short-chat and a
 # long-document context) and keep the config whose WORST grid point is the
 # largest fraction of that point's achievable peak (max-min, not max-mean:
 # the paper's figures reward flatness across the grid, not one tall corner).
+
+
+# Analytic scheduler model for the two policy-sensitive traffic points the
+# measured A/B (benchmarks/serve_sweep.py:scheduler_ab_scenario) exercises.
+# ``residency``: fraction of a shared family prefix still resident when the
+# NEXT family member is admitted, under the A/B's pressure regime (the pool
+# holds roughly half the live prefix families at once): prefix-aware
+# admission groups a family's requests back to back so its prefix survives
+# its whole run; interleaving policies (fifo, slo) lose it to the other
+# families' allocations about half the time.  ``interactive_wait``: document
+# prefills an interactive arrival sits behind before admission — slo's
+# class-ordered window admits it next (0); arrival-ordered policies make it
+# wait out one queued document (1).
+SCHEDULER_MODEL = {
+    "fifo": {"residency": 0.5, "interactive_wait": 1.0},
+    "prefix-aware": {"residency": 1.0, "interactive_wait": 1.0},
+    "slo": {"residency": 0.5, "interactive_wait": 0.0},
+}
 
 
 def select_serve_defaults(arch: str, *, batch_size: int = 8,
@@ -88,29 +107,48 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
                           prefill_chunks=(16, 32, 64),
                           page_sizes=(8, 16, 32),
                           kv_dtypes=("float32", "bfloat16", "int8"),
+                          schedulers=("fifo", "prefix-aware", "slo"),
+                          shared_frac: float = 0.75, gen_tokens: int = 32,
                           hw: HwSpec = V5E, smoke: bool = False) -> Dict:
     """Emit ONE tuned serving config for ``serve.ServeEngine``.
 
-    Scores every (token_budget × prefill_chunk × page_size × kv_dtype)
-    candidate on a traffic-mix grid via ``roofline.mixed_bound`` (the
-    parameter sweep is analytic — no engine runs).  The ``kv_dtype`` axis
-    makes the tuned config pick the MEMORY REPRESENTATION too — the paper's
-    "set it once" now covers the decisive memory-mode knob: an int8 pool
-    streams roughly a quarter of the fp32 decode-side bytes, so on
-    memory-dominated mixes it lifts every criterion at once.  The criteria
-    are pack tokens/s on the mix points (prefill capped at what the engine
-    can actually pack per tick) PLUS the decode rate under the blend tick
-    (1/tick_s — a decoding user's inter-token gap is the tick, so this
-    criterion pulls against unbounded pack growth).  Returns::
+    Scores every (token_budget × prefill_chunk × page_size × kv_dtype ×
+    scheduler) candidate on a traffic-mix grid via ``roofline.mixed_bound``
+    (the parameter sweep is analytic — no engine runs).  The ``kv_dtype``
+    axis makes the tuned config pick the MEMORY REPRESENTATION — the
+    paper's "set it once" covers the decisive memory-mode knob: an int8
+    pool streams roughly a quarter of the fp32 decode-side bytes, so on
+    memory-dominated mixes it lifts every criterion at once.  The
+    ``scheduler`` axis adds the WORKLOAD POLICY via ``SCHEDULER_MODEL``,
+    scored on two extra criteria that mirror the measured A/B scenario:
+
+    - ``warm@families`` — request throughput on shared-prefix traffic
+      (``shared_frac`` of each ``context_len`` prompt is a family prefix,
+      ``gen_tokens`` generated): serving a request costs
+      ``(1 - hit)·S + G`` pack tokens where ``hit = shared_frac ×
+      residency(scheduler)``, so policies that keep a family's prefix
+      resident convert the same pack rate into more emitted tokens.
+    - ``interactive@arrival`` — 1 / (time to an interactive arrival's first
+      token): ``interactive_wait(scheduler)`` document prefills of
+      admission delay plus one tick, at the blend point's tick time.
+
+    The remaining criteria are pack tokens/s on the mix points (prefill
+    capped at what the engine can actually pack per tick) PLUS the decode
+    rate under the blend tick (1/tick_s — a decoding user's inter-token gap
+    is the tick, so this criterion pulls against unbounded pack growth).
+    Returns::
 
         {"best": {token_budget, prefill_chunk, page_size, kv_dtype,
-                  score, ...},
+                  scheduler, score, ...},
          "table": [per-candidate rows with per-criterion values/fractions]}
 
     ``score`` is the candidate's worst-case fraction of the per-criterion
     best across all candidates (1.0 = this config is on the peak for every
-    criterion).  benchmarks/serve_sweep.py records the selection next to
-    the measured rows in BENCH_serve.json.
+    criterion) — under max-min the scheduler axis is typically decided by
+    whichever criterion a policy sacrifices LEAST (slo gives up some warm
+    throughput, prefix-aware gives up the interactive jump; fifo gives up
+    both and can never win the axis).  benchmarks/serve_sweep.py records
+    the selection next to the measured rows in BENCH_serve.json.
     """
     from repro.configs import get_config
     from repro.core.roofline import mixed_bound
@@ -142,25 +180,46 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
             for ps in page_sizes:
                 for kvd in kv_dtypes:
                     tps = {}
+                    blend_tick_s = 1e-30
+                    blend_tps = 0.0
                     for name, nd, npf, ctx in mix_points(tb, pc):
                         r = mixed_bound(cfg, n_decode=nd, n_prefill=npf,
                                         context_len=ctx, hw=hw, page_size=ps,
                                         kv_dtype=kvd)
                         tps[name] = r["tokens_per_s"]
                         if name == "blend@doc":
+                            blend_tick_s = max(r["tick_s"], 1e-30)
+                            blend_tps = r["tokens_per_s"]
                             # a decoding user's inter-token gap IS the tick:
                             # the latency criterion pulls AGAINST ever-bigger
                             # packs, so max-min trades throughput off against
                             # p50 decode latency under concurrent prefill
                             # (the PR 2 metric)
-                            tps["decode_rate@blend"] = 1.0 / max(r["tick_s"],
-                                                                 1e-30)
-                    rows.append({"token_budget": tb, "prefill_chunk": pc,
-                                 "page_size": ps, "kv_dtype": kvd,
-                                 "criteria": tps})
+                            tps["decode_rate@blend"] = 1.0 / blend_tick_s
+                    for sched in schedulers:
+                        model = SCHEDULER_MODEL[sched]
+                        S = max(int(context_len * shared_frac), 1)
+                        G = max(gen_tokens, 1)
+                        hit = shared_frac * model["residency"]
+                        # pack tokens a warm-family request still costs vs
+                        # the full cold S+G — the scheduler's reuse leverage
+                        crit = dict(tps)
+                        crit["warm@families"] = (
+                            blend_tps * (S + G) / ((1.0 - hit) * S + G))
+                        # ONE document occupies one slot and prefills at
+                        # most prefill_chunk tokens per tick (the leftover
+                        # budget caps it too) — not chunk x batch_size
+                        prefill_ticks = -(-context_len // max(
+                            min(pc, tb - 1), 1))
+                        crit["interactive@arrival"] = 1.0 / (
+                            blend_tick_s
+                            * (1 + model["interactive_wait"] * prefill_ticks))
+                        rows.append({"token_budget": tb, "prefill_chunk": pc,
+                                     "page_size": ps, "kv_dtype": kvd,
+                                     "scheduler": sched, "criteria": crit})
     if not rows:
         raise ValueError("no valid (token_budget, prefill_chunk, page_size, "
-                         "kv_dtype) candidate for the given grids")
+                         "kv_dtype, scheduler) candidate for the given grids")
     peak = {name: max(r["criteria"][name] for r in rows)
             for name in rows[0]["criteria"]}
     for r in rows:
@@ -171,6 +230,7 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
         r["mean_fraction"] = sum(frac.values()) / len(frac)
     best = max(rows, key=lambda r: (r["score"], r["mean_fraction"]))
     return {"best": {k: best[k] for k in ("token_budget", "prefill_chunk",
-                                          "page_size", "kv_dtype", "score",
+                                          "page_size", "kv_dtype",
+                                          "scheduler", "score",
                                           "mean_fraction")},
             "table": rows}

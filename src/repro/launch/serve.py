@@ -1,6 +1,9 @@
 """Serving launcher: batched requests through the ragged token-budget
 engine (``--engine chunked`` runs the PR 1 two-phase paged engine,
 ``--engine reference`` the seed lock-step engine, for A/B).
+``--scheduler`` swaps the admission/packing policy (fifo | prefix-aware |
+slo); with ``slo``, ``--interactive-every N`` marks every Nth request
+priority 1 so the policy has two classes to separate.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --requests 12
 """
@@ -47,6 +50,13 @@ def main(argv=None):
                          "dtype); int8 quantizes on write with per-entry-"
                          "per-head scales and holds 2-4x the pages in the "
                          "same pool bytes")
+    ap.add_argument("--scheduler", choices=("fifo", "prefix-aware", "slo"),
+                    default="fifo",
+                    help="admission/packing policy (fifo reproduces the "
+                         "pre-policy engine exactly)")
+    ap.add_argument("--interactive-every", type=int, default=0, metavar="N",
+                    help="mark every Nth request priority 1 (the "
+                         "interactive class the slo scheduler serves first)")
     args = ap.parse_args(argv)
 
     if skip_reason(args.arch, "decode_32k"):
@@ -66,15 +76,22 @@ def main(argv=None):
                              ragged=args.engine == "ragged",
                              flash_decode=args.flash_decode,
                              prefix_cache=not args.no_prefix_cache,
-                             kv_dtype=args.kv_dtype)
+                             kv_dtype=args.kv_dtype,
+                             scheduler=args.scheduler)
     rng = np.random.RandomState(0)
     sample_kw = {}
     if args.engine != "reference" and args.temperature > 0:
         sample_kw = dict(temperature=args.temperature, top_k=args.top_k)
+    def _priority(i):
+        if args.engine == "reference" or not args.interactive_every:
+            return {}
+        return {"priority": int((i + 1) % args.interactive_every == 0)}
+
     uids = [engine.submit(rng.randint(0, cfg.vocab_size, args.prompt_len),
                           max_tokens=args.max_tokens,
                           **(dict(sample_kw, seed=(args.seed or 0) + i)
-                             if sample_kw else {}))
+                             if sample_kw else {}),
+                          **_priority(i))
             for i in range(args.requests)]
     results = engine.run()
     for uid in uids:

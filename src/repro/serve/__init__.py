@@ -1,4 +1,9 @@
 from repro.serve.serve_step import (make_ragged_step, make_serve_step,  # noqa: F401
                                     decode_state_specs)
 from repro.serve.engine import ServeEngine  # noqa: F401
-from repro.serve.reference import ReferenceEngine, Request  # noqa: F401
+from repro.serve.pool import PagePool, kv_bytes_per_token, kv_page_bytes  # noqa: F401
+from repro.serve.scheduler import (SCHEDULERS, EngineView,  # noqa: F401
+                                   FifoScheduler, PrefixAwareScheduler,
+                                   Scheduler, SloScheduler, make_scheduler)
+from repro.serve.handle import Request, RequestHandle  # noqa: F401
+from repro.serve.reference import ReferenceEngine  # noqa: F401

@@ -1,91 +1,67 @@
-"""Ragged token-budget serving engine with a refcounted, copy-on-write,
-prefix-cached page pool: one compiled program AND one resident working set
-for any traffic.
+"""ServeEngine — the orchestration layer of a three-layer serving stack.
 
 The paper's core result is that ONE set of system settings (KMP_AFFINITY +
 taskset + all2all **cache** mode) keeps every (Nproc × Nthread)
-factorization near practical peak — and the decisive setting is the cache
-mode: the shared working set is served from cache instead of being
-recomputed or refetched per process.  This engine applies both halves of
-that lesson to serving:
+factorization near practical peak — because the SETTINGS layer (how memory
+is managed) and the WORKLOAD layer (how users factor their work) are
+cleanly separable knobs, and only the former needs global tuning.  The
+serving stack is now built on exactly that separation:
 
-- **One compiled program** (PR 2): each tick a host-side scheduler packs a
-  fixed token budget ``T`` (``token_budget``) with decode tokens FIRST (a
-  decoding slot emits every tick; prefill never stalls it) and prefill
-  chunks (≤ ``prefill_chunk`` per slot) in the leftover budget, driving a
-  single jit'd ``(T,)`` ragged step (``serve_step.make_ragged_step``) with
-  per-token (slot, position, validity) vectors.  The mix is pure data, so
-  exactly ONE program is ever traced (``stats["traces"]``).
-- **One resident working set** (PR 3): thousands of requests sharing a
-  system-prompt prefix are the serving analogue of the paper's "millions of
-  users" hitting the same data — so the paged KV pool is a shared,
-  refcounted cache rather than scratch space.  The "all2all cache mode" of
-  the engine: the shared prefix stays resident and every request reads it
-  from the pool instead of re-prefilling it.
-- **Half-or-better bytes per resident token** (this PR): the pool's memory
-  REPRESENTATION is a knob (``kv_dtype``: float32 | bfloat16 | int8; the
-  default follows the activation dtype).  An int8 pool stores symmetric
-  int8 K/V plus one f32 scale per pool entry per KV head, and its lifecycle
-  is **write-quantize → paged read-dequant → COW-with-scales**: rows are
-  quantized exactly once, as the serve step scatters them into the pool
-  (``kernels.ops.kv_scatter_quantized``); every reader — prefill chunks,
-  decode ticks, prefix hits, the fused-dequant Pallas kernels — dequantizes
-  the same stored bytes; and copy-on-write copies a page's scale row with
-  its values (``kernels.ops.copy_pages``).  Because the page budget is
-  really a BYTE budget, int8 holds 2-4× the pages in the same bytes: more
-  concurrent decoders admitted and more refcount-0 prefix pages resident
-  before eviction.  This is the memory-mode half of the paper's result
-  applied twice over — the decode path streams ~¼ the KV bytes per token
-  (the bandwidth-bound term of `core.roofline.mixed_bound`), AND the
-  working set that must stay resident shrinks to match.
+- **Settings layer — `serve.pool.PagePool`**: page allocation, refcounts,
+  the prefix trie, copy-on-write matching, LRU eviction, and the
+  byte-denominated budget (``kv_dtype``: float32 | bfloat16 | int8 — PR 4's
+  memory-representation knob, the analogue of the paper's decisive memory
+  mode).  Set once per engine; identical beneath every policy.
+- **Workload layer — `serve.scheduler`**: admission order and pack order
+  are a pluggable policy object (``scheduler=``): ``FifoScheduler``
+  (default — bit-identical to the PR 1–4 engine), ``PrefixAwareScheduler``
+  (bounded-window reordering so requests sharing a cached or in-flight
+  prefix land in the same wave), ``SloScheduler`` (interactive-vs-batch
+  classes via ``Request.priority``).  Policies return ORDERINGS only; the
+  engine keeps the mechanism, so every policy inherits the
+  no-mid-flight-OOM and single-trace guarantees.
+- **Client layer — `serve.handle.RequestHandle`**: ``submit()`` returns an
+  int-compatible streaming handle — ``handle.tokens()`` iterates tokens
+  incrementally (driving ``tick()`` on starvation), ``handle.cancel()``
+  releases the request's suffix pages mid-flight (refcount-safe: shared
+  prefix pages survive for siblings and the cache), ``handle.done`` /
+  ``handle.result()`` complete the lifecycle.  ``run()``/``tick()`` batch
+  drivers are unchanged.  End-to-end client: ``examples/serve_stream.py``.
 
-Prefix-cache lifecycle (host-side; the device only ever sees block tables):
+What the orchestrator itself still owns is the device contract (unchanged
+from PR 1–4, and the reason any policy mix stays near peak):
 
-- **Index** — a trie over FULL pages of prompt tokens maps token prefixes to
-  pool pages.  As a slot's prefill passes each page boundary, that page is
-  inserted (pages whose prefix is already owned by another page are left
-  private).  Only prompt pages are indexed — decode output is per-request.
-- **Match** — at admission the queue head's prompt walks the trie: every
-  matched full page is mapped into the slot's block table (refcount++) and
-  prefill starts at the first unmatched token, so a warm system prompt
-  skips almost all prefill compute.  ``reset_paged_slots`` presets
-  kpos/slen for the inherited positions.  Admission reserves ONLY the
-  unmatched-suffix pages — the strict-FIFO no-mid-flight-OOM guarantee now
-  counts what the hit actually needs, not the cold-start worst case.
-- **Copy-on-write** — if the prompt diverges from a cached page mid-page
-  (longest-common-prefix ≥ 1 token), the page is duplicated into a freshly
-  allocated private page with a jit'd page-copy op
-  (``models.model.copy_kv_pages`` → ``kernels.ops.copy_pages``) and the
-  block-table entry points at the copy; stale tail offsets stay masked via
-  kpos until prefill overwrites them.  Writes therefore NEVER target a page
-  with refcount > 1 — asserted by construction: a slot's first unmatched
-  position always falls in a page it owns.
-- **Release / evict** — completion decrements refcounts; refcount-0 pages
-  that are indexed STAY in the pool as cache (LRU-ordered) instead of being
-  freed eagerly, and are evicted leaf-first on allocation pressure.  Pages
-  never indexed return to the free list immediately.  The pool is always
-  fully reclaimable: free + refcount-0-cached == n_pages when idle.
+- **One compiled program** (PR 2): each tick packs a fixed token budget
+  ``T`` (``token_budget``) with decode tokens FIRST (a decoding slot emits
+  every tick; prefill never stalls it) and prefill chunks (≤
+  ``prefill_chunk`` per slot) in the leftover budget, driving a single
+  jit'd ``(T,)`` ragged step (``serve_step.make_ragged_step``) with
+  per-token (slot, position, validity) vectors.  The mix — and now the
+  policy ordering it — is pure data, so exactly ONE program is ever traced
+  (``stats["traces"]``).
+- **One resident working set** (PR 3): the paged KV pool doubles as a
+  refcounted, copy-on-write prefix cache — thousands of requests sharing a
+  system prompt read it from resident pages instead of re-prefilling (the
+  "all2all cache mode" of the engine).  Match/index/evict policy lives in
+  the pool; the engine runs the two control-plane programs (COW page copy,
+  slot reset) the pool's decisions require.
+- **Half-or-better bytes per resident token** (PR 4): int8 pools quantize
+  at KV-write time (write-quantize → paged read-dequant → COW-with-scales),
+  so the byte-denominated budget holds 2-4× the pages — more concurrent
+  decoders and more resident prefix pages from the same memory.
 
-Sharing is enabled automatically only for models whose mixers are all
-global (non-windowed) attention — recurrent states and windowed circular
-buffers are per-slot and cannot be inherited from a page, so hybrid models
-run with ``prefix_len = 0`` and behave exactly as before.
-
-The KV pages shared between slots need no kernel support: the ragged Pallas
-kernel (``kernels.flash_attention.ragged_paged_flash``) already resolves
-token → slot → page per grid step, so aliased block-table rows just DMA the
-same tile.
-
-The PR 1 two-phase path is kept behind ``ragged=False`` for A/B, and the
-seeded-sampling / paged-slot machinery is unchanged from PR 2
-(``benchmarks/serve_sweep.py`` carries the comparisons).
+The PR 1 two-phase path is kept behind ``ragged=False`` for A/B (admission
+policy applies there too; pack ordering is a ragged-path concept).
+``benchmarks/serve_sweep.py`` carries the engine and scheduler A/Bs;
+``core.autotune.select_serve_defaults`` emits the tuned-once serving config
+(token_budget × prefill_chunk × page_size × kv_dtype × scheduler).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -93,36 +69,15 @@ import numpy as np
 
 from repro.configs.base import ModelCfg
 from repro.models import model as M
-from repro.serve.reference import Request
+from repro.serve.handle import Request, RequestHandle
+from repro.serve.pool import (PagePool, _PrefixNode, kv_bytes_per_token,
+                              kv_page_bytes)
+from repro.serve.scheduler import EngineView, Scheduler, make_scheduler
 from repro.serve.serve_step import STATE_DONATE_ARGNUM, make_ragged_step
 
-from repro.core.roofline import KV_ITEMSIZE, KV_SCALE_BYTES
+from repro.core.roofline import KV_ITEMSIZE
 
-
-def kv_page_bytes(cfg: ModelCfg, page_size: int, kv_dtype: str) -> int:
-    """Bytes one pool page costs across ALL paged (global-attention) layers
-    for a given storage dtype — K and V values plus, for int8, their scale
-    rows.  The engine sizes its page budget with this: a pool budget is a
-    BYTE budget, and int8 fits ~``4·hd/(hd+4)``× the pages of float32 in
-    the same bytes (≈3.8× at hd=64, ≥2× for hd ≥ 4; 3.2× on the smoke
-    model's hd=16)."""
-    isize = KV_ITEMSIZE[kv_dtype]
-    sbytes = KV_SCALE_BYTES[kv_dtype]
-    total = 0
-    for st in cfg.stages:
-        for blk in st.pattern:
-            if blk.mixer == "attn" and blk.attn.window is None:
-                kvH, hd = blk.attn.num_kv_heads, blk.attn.head_dim
-                total += st.repeats * 2 * page_size * kvH * (hd * isize
-                                                             + sbytes)
-    return total
-
-
-def kv_bytes_per_token(cfg: ModelCfg, kv_dtype: str) -> int:
-    """Bytes of paged-pool KV one token occupies (and one decode step must
-    stream per context token) across all global-attention layers — the
-    quantity the int8 pool halves-or-better vs float32."""
-    return kv_page_bytes(cfg, 1, kv_dtype)
+__all__ = ["ServeEngine", "kv_page_bytes", "kv_bytes_per_token"]
 
 
 @dataclasses.dataclass
@@ -135,29 +90,8 @@ class _Slot:
     # prefix-cache bookkeeping: the trie node matching the indexed prefix so
     # far (None = this slot's prefix is owned elsewhere, stop indexing) and
     # how many of this slot's leading pages are on that trie chain
-    node: Optional["_PrefixNode"] = None
+    node: Optional[_PrefixNode] = None
     n_indexed: int = 0
-
-
-class _PrefixNode:
-    """One full page of prompt tokens in the prefix trie.
-
-    ``children`` maps the NEXT page's token tuple to its node, so a cached
-    prefix is a root-to-node chain of full pages.  Refcounts live in the
-    engine's per-page array; a node is evictable when its page's refcount is
-    0 and it has no children (leaf-first eviction keeps every cached chain
-    reachable from the root — an active request holds refs on its whole
-    matched path, so refcounts are monotone non-increasing down the trie)."""
-
-    __slots__ = ("key", "page", "parent", "children", "last_used")
-
-    def __init__(self, key: Optional[Tuple[int, ...]], page: int,
-                 parent: Optional["_PrefixNode"]):
-        self.key = key
-        self.page = page
-        self.parent = parent
-        self.children: Dict[Tuple[int, ...], "_PrefixNode"] = {}
-        self.last_used = 0
 
 
 class ServeEngine:
@@ -166,7 +100,8 @@ class ServeEngine:
                  max_pages: Optional[int] = None, prefill_chunk: int = 32,
                  token_budget: int = 128, greedy: bool = True,
                  ragged: bool = True, flash_decode: bool = False,
-                 prefix_cache: bool = True, kv_dtype: Optional[str] = None):
+                 prefix_cache: bool = True, kv_dtype: Optional[str] = None,
+                 scheduler=None):
         self.params = params
         self.cfg = cfg
         self.B = batch_size
@@ -176,6 +111,21 @@ class ServeEngine:
         self.budget = token_budget
         self.greedy = greedy
         self.ragged = ragged
+        # workload-policy layer: admission + pack ordering (None/"fifo" is
+        # the PR 1-4 behavior, bit-identical).  Policies that keep the
+        # protocol's identity orders (fifo: all three; prefix-aware: the
+        # pack pair) let the hot loop skip building per-tick EngineView
+        # snapshots and the O(queue) candidate/validation/rebuild work —
+        # a deep backlog costs the default policy nothing extra per tick
+        self.scheduler = make_scheduler(scheduler)
+        self.scheduler_name = getattr(self.scheduler, "name",
+                                      type(self.scheduler).__name__)
+        cls = type(self.scheduler)
+        self._default_admit = (
+            getattr(cls, "admission_order", None) is Scheduler.admission_order)
+        self._default_pack = (
+            getattr(cls, "decode_order", None) is Scheduler.decode_order
+            and getattr(cls, "prefill_order", None) is Scheduler.prefill_order)
         # paged-pool storage representation: None follows the activation
         # dtype (the unquantized default); "int8" is the headline — half-or-
         # better bytes per resident token, quantized at KV-write time so
@@ -216,30 +166,29 @@ class ServeEngine:
             self.n_pages = max(base_pages, base_pages * ref // max(act, 1))
         else:
             self.n_pages = base_pages
-        self._free: List[int] = list(range(self.n_pages))
-        self._ref = np.zeros(self.n_pages, np.int64)  # per-page refcounts
-        self._root = _PrefixNode(None, -1, None)  # trie of cached prefixes
-        self._page_node: Dict[int, _PrefixNode] = {}  # page -> trie node
-        self._clock = 0  # LRU counter (bumped per touch)
+        # memory-settings layer: one pool object owns every page policy
+        self.pool = PagePool(self.n_pages, page_size,
+                             index_enabled=self.prefix_cache)
         self.queue: deque = deque()
         self.slots: List[Optional[_Slot]] = [None] * batch_size
         self._uid = 0
         self._rngs: Dict[int, np.random.Generator] = {}
         self.completion_order: List[int] = []
         self._state = None  # persistent: the pool doubles as the prefix cache
-        self.stats = {"chunk_ticks": 0, "decode_ticks": 0, "ragged_ticks": 0,
-                      "ticks": 0, "packed_tokens": 0, "traces": 0,
-                      "pages_in_use_peak": 0, "admissions": 0,
-                      "prefix_hits": 0, "prefix_tokens_reused": 0,
-                      "cow_copies": 0, "evictions": 0,
-                      # memory-representation accounting: bytes of paged KV
-                      # one token occupies (streams per context token at
-                      # decode) and the pool's byte footprint at this dtype
-                      "kv_dtype": self.kv_dtype,
-                      "kv_bytes_per_token": kv_bytes_per_token(
-                          cfg, self.kv_dtype),
-                      "kv_pool_bytes": self.n_pages * kv_page_bytes(
-                          cfg, page_size, self.kv_dtype)}
+        self._stats = {"chunk_ticks": 0, "decode_ticks": 0, "ragged_ticks": 0,
+                       "ticks": 0, "packed_tokens": 0, "traces": 0,
+                       "pages_in_use_peak": 0, "admissions": 0,
+                       "prefix_hits": 0, "prefix_tokens_reused": 0,
+                       "cow_copies": 0, "cancelled": 0,
+                       "scheduler": self.scheduler_name,
+                       # memory-representation accounting: bytes of paged KV
+                       # one token occupies (streams per context token at
+                       # decode) and the pool's byte footprint at this dtype
+                       "kv_dtype": self.kv_dtype,
+                       "kv_bytes_per_token": kv_bytes_per_token(
+                           cfg, self.kv_dtype),
+                       "kv_pool_bytes": self.n_pages * kv_page_bytes(
+                           cfg, page_size, self.kv_dtype)}
         # per-token / per-tick logs for the latency benchmark:
         # token_log rows are (uid, tick index, wall time); tick_log rows are
         # (had outstanding prefill at tick start, wall time at tick end)
@@ -248,7 +197,7 @@ class ServeEngine:
 
         def _count_traces(fn):
             def wrapper(*a):
-                self.stats["traces"] += 1  # python body runs at trace time
+                self._stats["traces"] += 1  # python body runs at trace time
                 return fn(*a)
             return wrapper
 
@@ -276,10 +225,16 @@ class ServeEngine:
             lambda s, src, dst: M.copy_kv_pages(cfg, s, src, dst),
             donate_argnums=(0,))
 
+    # -- public surface ---------------------------------------------------
     def submit(self, prompt, max_tokens: int = 16, eos_id=None, *,
                temperature: Optional[float] = None,
                top_k: Optional[int] = None,
-               seed: Optional[int] = None) -> int:
+               seed: Optional[int] = None,
+               priority: int = 0) -> RequestHandle:
+        """Queue one request; returns a streaming ``RequestHandle`` (an
+        ``int`` subclass carrying the uid, so legacy id-keyed drivers are
+        unchanged).  ``priority`` is the scheduling class read by
+        ``SloScheduler`` (>= 1 interactive, 0 batch; FIFO ignores it)."""
         prompt = np.asarray(prompt, np.int32)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -297,7 +252,8 @@ class ServeEngine:
             raise ValueError(f"top_k must be >= 1, got {top_k}")
         self._uid += 1
         req = Request(self._uid, prompt, max_tokens, eos_id,
-                      temperature=temperature, top_k=top_k, seed=seed)
+                      temperature=temperature, top_k=top_k, seed=seed,
+                      priority=priority)
         # admission reserves only the unmatched suffix on a prefix hit, but
         # cache contents churn before this request reaches the head of the
         # queue — validate against the cold-start worst case
@@ -310,9 +266,62 @@ class ServeEngine:
             self._rngs[self._uid] = np.random.default_rng(
                 seed if seed is not None else self._uid)
         self.queue.append(req)
-        return self._uid
+        return RequestHandle(req, self)
 
-    # -- page allocator / prefix cache ------------------------------------
+    def cancel(self, handle_or_uid) -> bool:
+        """Stop a request and release what it holds.  Queued: dequeued
+        before it ever takes pages.  Admitted: its slot is freed and its
+        page references dropped — shared prefix pages survive for siblings
+        and for the cache (refcounted), its own indexed prompt pages stay
+        resident as cache, and everything else returns to the free list.
+        Returns False (no-op) for finished or unknown requests."""
+        uid = int(handle_or_uid)
+        for i, req in enumerate(self.queue):
+            if req.uid == uid:
+                del self.queue[i]
+                req.cancelled = req.done = True
+                self._rngs.pop(uid, None)
+                self._stats["cancelled"] += 1
+                return True
+        for b, s in enumerate(self.slots):
+            if s is not None and s.req.uid == uid:
+                s.req.cancelled = s.req.done = True
+                self._release_slot(b)
+                self._stats["cancelled"] += 1
+                return True
+        return False
+
+    @property
+    def stats(self) -> Dict:
+        """Engine counters merged with the pool's (read-only snapshot)."""
+        return {**self._stats, **self.pool.stats}
+
+    # -- pool passthroughs (PR 1-4 surface; tests and drivers use these) --
+    @property
+    def _ref(self) -> np.ndarray:
+        return self.pool._ref
+
+    @property
+    def _free(self) -> List[int]:
+        return self.pool._free
+
+    @property
+    def cached_pages(self) -> int:
+        """Pages currently held by the prefix index."""
+        return self.pool.cached_pages
+
+    @property
+    def reclaimable_pages(self) -> int:
+        """Free pages plus refcount-0 cached pages — the allocator can hand
+        all of these out; equals ``n_pages`` whenever no request is live."""
+        return self.pool.reclaimable_pages
+
+    def drop_prefix_cache(self) -> int:
+        """Evict every refcount-0 cached page (A/B runs, tests).  Returns
+        the number of pages returned to the free list."""
+        return self.pool.drop_cache()
+
+    # -- admission --------------------------------------------------------
     def _pages_needed(self, req: Request, matched_pages: int = 0) -> int:
         """Pages the request must RESERVE: its full footprint minus the
         ``matched_pages`` shared prefix pages it maps instead of allocating."""
@@ -321,89 +330,143 @@ class ServeEngine:
         total = -(-(len(req.prompt) + req.max_tokens) // self.page_size)
         return total - matched_pages
 
-    def _match_prefix(self, prompt: np.ndarray):
-        """Longest cached prefix of ``prompt``: walk the trie a full page at
-        a time, then probe the children of the last matched node for a
-        partial-page hit (longest common prefix ≥ 1 token → COW candidate).
+    def _view(self, include_queue: bool = True) -> EngineView:
+        # pack-order consultations get an empty queue (documented on
+        # EngineView): packing is a slots concern, and copying a deep
+        # backlog every tick would tax the hot loop for nothing
+        return EngineView(
+            queue=tuple(self.queue) if include_queue else (),
+            slot_requests=tuple(s.req if s is not None else None
+                                for s in self.slots),
+            slot_fill=tuple(s.fill if s is not None else 0
+                            for s in self.slots),
+            budget=self.budget, chunk=self.chunk, page_size=self.page_size,
+            match_len=self.pool.probe_prefix_len)
 
-        Returns (node, pages, matched_tokens, cow) with ``pages`` the full
-        shared pages and ``cow`` either None or (src_page, extra_tokens)."""
-        if not self.prefix_cache:
-            return self._root, [], 0, None
-        P = self.page_size
-        node, pages, matched = self._root, [], 0
-        self._clock += 1
-        while matched + P <= len(prompt):
-            child = node.children.get(
-                tuple(int(t) for t in prompt[matched:matched + P]))
-            if child is None:
-                break
-            child.last_used = self._clock
-            node = child
-            pages.append(child.page)
-            matched += P
-        cow = None
-        rem = prompt[matched:]
-        if rem.size and node.children:
-            best_len, best = 0, None
-            for key, child in node.children.items():
-                k = np.asarray(key[:rem.size], np.int32)
-                lcp = int((np.cumprod(k == rem[:k.size]) if k.size else
-                           np.zeros(0)).sum())
-                if lcp > best_len:
-                    best_len, best = lcp, child
-            if best is not None:
-                best.last_used = self._clock
-                cow = (best.page, best_len)
-        return node, pages, matched, cow
+    def _pack_order(self, order, slots_in: List[int],
+                    fn_name: str) -> List[int]:
+        """A pack order must PERMUTE the engine-computed slot list: a
+        duplicate would pack (and sample) a slot twice, an omission would
+        stall a decoding slot — both break invariants every policy
+        inherits, so they fail loudly here instead of corrupting output."""
+        order = list(order)
+        if sorted(order) != sorted(slots_in):
+            raise ValueError(
+                f"{self.scheduler_name}: {fn_name} must permute "
+                f"{slots_in}, got {order}")
+        return order
 
-    def _evictable(self) -> int:
-        """Cached pages reclaimable under pressure (refcount 0)."""
-        return sum(1 for p in self._page_node if self._ref[p] == 0)
+    def _admission_candidates(self) -> List[Request]:
+        """Consult the scheduler for this round's candidate order (indices
+        into the queue snapshot), validated to a duplicate-free in-range
+        sequence.  The policy proposes; admission still disposes: the
+        engine walks candidates in the returned order and STOPS at the
+        first whose page demand exceeds supply, so no policy can overcommit
+        the pool or bypass the reservation discipline."""
+        view = self._view()
+        order = list(self.scheduler.admission_order(view))
+        n = len(view.queue)
+        if len(set(order)) != len(order) or any(
+                not (0 <= i < n) for i in order):
+            raise ValueError(
+                f"{self.scheduler_name}: admission_order returned "
+                f"{order!r} for a {n}-deep queue")
+        return [view.queue[i] for i in order]
 
-    def _evict_one(self) -> bool:
-        """Drop the least-recently-used refcount-0 LEAF from the trie and
-        return its page to the free list.  Leaf-first keeps every cached
-        chain reachable; a ref-0 node's descendants are all ref-0 (active
-        requests hold their whole matched path), so repetition drains any
-        evictable subtree."""
-        best = None
-        stack = list(self._root.children.values())
-        while stack:
-            nd = stack.pop()
-            stack.extend(nd.children.values())
-            if nd.children or self._ref[nd.page] != 0:
+    def _admit(self, state):
+        """Admit scheduler-ordered queue candidates into free slots while
+        the pages each actually needs — its unmatched suffix, after the
+        longest-cached-prefix match — fit in free + evictable pages (no
+        mid-flight OOM, no starving the admission round on pages a prefix
+        hit would never use).  FIFO order reproduces the PR 1-4 strict
+        head-of-line behavior bit for bit."""
+        if not self.queue or all(s is not None for s in self.slots):
+            return state  # nothing to admit: the policy is not consulted
+        mask = np.zeros(self.B, bool)
+        rows = np.full((self.B, self.pps), self.n_pages, np.int32)
+        plen = np.zeros(self.B, np.int32)
+        # unused COW pairs keep the n_pages sentinel: kernels.ops.copy_pages
+        # turns them into self-copy no-ops, so the op is one fixed-width trace
+        cow_src = np.full(self.B, self.n_pages, np.int32)
+        cow_dst = np.full(self.B, self.n_pages, np.int32)
+        cow_pins: List[int] = []
+        n_cow = 0
+        # default (FIFO) admission peeks the queue head and poplefts in
+        # O(1) — the PR 1-4 loop verbatim; only a reordering policy pays
+        # for the candidate snapshot, validation, and queue rebuild
+        cands = None if self._default_admit else self._admission_candidates()
+        admitted: set = set()
+        ci = 0
+        for b in range(self.B):
+            if self.slots[b] is not None:
                 continue
-            if best is None or nd.last_used < best.last_used:
-                best = nd
-        if best is None:
-            return False
-        del best.parent.children[best.key]
-        del self._page_node[best.page]
-        self._free.append(best.page)
-        self.stats["evictions"] += 1
-        return True
+            if cands is None:
+                if not self.queue:
+                    continue
+                req = self.queue[0]
+            else:
+                if ci >= len(cands):
+                    continue
+                req = cands[ci]
+            node, mpages, matched, cow = self.pool.match_prefix(req.prompt)
+            need = self._pages_needed(req, matched_pages=len(mpages))
+            if cow is not None and need > self.pool.available(
+                    mpages + [cow[0]]):
+                cow = None  # pinning the COW source would leave the pool
+                # short one page: forgo the partial-page reuse (it is an
+                # optimization; the full-page match alone always fits)
+            if need > self.pool.available(mpages):
+                break  # stop at the first infeasible candidate: the pool's
+                # reservation discipline outranks any policy's ordering
+            if cands is None:
+                self.queue.popleft()
+            else:
+                ci += 1
+                admitted.add(req.uid)
+            self.pool.share(mpages)
+            if cow is not None:
+                self.pool.share([cow[0]])  # pin the COW source vs eviction
+                cow_pins.append(cow[0])
+            alloc = self.pool.alloc(need)  # arrives refcounted
+            if cow is not None:
+                cow_src[b], cow_dst[b] = cow[0], alloc[0]
+                matched += cow[1]
+                n_cow += 1
+            pages = mpages + alloc
+            rows[b, :len(pages)] = pages
+            plen[b] = matched
+            s = _Slot(req, pages, fill=matched, node=node,
+                      n_indexed=len(mpages))
+            if matched >= len(req.prompt):
+                # whole prompt cached: straight to decode, same resume
+                # scheme as a completed prefill (last token, position L)
+                s.pos = len(req.prompt)
+                s.last_tok = int(req.prompt[-1])
+            self.slots[b] = s
+            mask[b] = True
+            self._stats["admissions"] += 1
+            if matched:
+                self._stats["prefix_hits"] += 1
+                self._stats["prefix_tokens_reused"] += matched
+        if mask.any():
+            if admitted:
+                self.queue = deque(r for r in self.queue
+                                   if r.uid not in admitted)
+            self._stats["pages_in_use_peak"] = max(
+                self._stats["pages_in_use_peak"], self.pool.pages_in_use)
+            if n_cow:
+                # device-side ordering is by data dependency (copy feeds the
+                # reset feeds the tick), so the host may unpin right away
+                state = self._copy(state, cow_src, cow_dst)
+                self._stats["cow_copies"] += n_cow
+            self.pool.release(cow_pins)
+            state = self._reset(state, self._template, mask, rows, plen)
+        return state
 
-    def _alloc(self, n: int) -> List[int]:
-        while len(self._free) < n:
-            if not self._evict_one():
-                raise RuntimeError(  # unreachable: _admit checks availability
-                    "page pool exhausted with nothing evictable")
-        return [self._free.pop() for _ in range(n)]
-
-    def _release_pages(self, pages: List[int]) -> None:
-        """Drop one reference per page.  Refcount-0 pages stay resident if
-        the prefix trie indexes them (the pool IS the cache; LRU eviction
-        reclaims them under pressure) and are freed immediately otherwise."""
-        for p in pages:
-            self._ref[p] -= 1
-            assert self._ref[p] >= 0, f"page {p} over-released"
-            if self._ref[p] == 0 and p not in self._page_node:
-                self._free.append(p)
-
+    # -- slot lifecycle ---------------------------------------------------
     def _release_slot(self, b: int) -> None:
         s = self.slots[b]
-        self._release_pages(s.pages)
+        self.pool.release(s.pages)
         self._rngs.pop(s.req.uid, None)
         self.slots[b] = None
 
@@ -422,115 +485,10 @@ class ServeEngine:
         while (s.n_indexed + 1) * P <= s.fill:
             j = s.n_indexed
             key = tuple(int(t) for t in s.req.prompt[j * P:(j + 1) * P])
-            child = s.node.children.get(key)
-            if child is None:
-                child = _PrefixNode(key, s.pages[j], s.node)
-                s.node.children[key] = child
-                self._page_node[s.pages[j]] = child
-            elif child.page != s.pages[j]:
-                s.node = None  # prefix owned elsewhere: stop indexing
+            s.node = self.pool.index_page(s.node, key, s.pages[j])
+            if s.node is None:
                 return
-            self._clock += 1
-            child.last_used = self._clock
-            s.node = child
             s.n_indexed += 1
-
-    @property
-    def cached_pages(self) -> int:
-        """Pages currently held by the prefix index."""
-        return len(self._page_node)
-
-    @property
-    def reclaimable_pages(self) -> int:
-        """Free pages plus refcount-0 cached pages — the allocator can hand
-        all of these out; equals ``n_pages`` whenever no request is live."""
-        return len(self._free) + self._evictable()
-
-    def drop_prefix_cache(self) -> int:
-        """Evict every refcount-0 cached page (A/B runs, tests).  Returns
-        the number of pages returned to the free list."""
-        n = 0
-        while self._evict_one():
-            n += 1
-        return n
-
-    # -- admission --------------------------------------------------------
-    def _admit(self, state):
-        """FIFO admission: a request enters a free slot only when the pages
-        it actually needs — its unmatched suffix, after the longest-cached-
-        prefix match — fit in free + evictable pages (no mid-flight OOM, no
-        reordering, and no starving the head of line on pages a prefix hit
-        would never use)."""
-        mask = np.zeros(self.B, bool)
-        rows = np.full((self.B, self.pps), self.n_pages, np.int32)
-        plen = np.zeros(self.B, np.int32)
-        # unused COW pairs keep the n_pages sentinel: kernels.ops.copy_pages
-        # turns them into self-copy no-ops, so the op is one fixed-width trace
-        cow_src = np.full(self.B, self.n_pages, np.int32)
-        cow_dst = np.full(self.B, self.n_pages, np.int32)
-        cow_pins: List[int] = []
-        n_cow = 0
-        for b in range(self.B):
-            if self.slots[b] is not None or not self.queue:
-                continue
-            req = self.queue[0]
-            node, mpages, matched, cow = self._match_prefix(req.prompt)
-            need = self._pages_needed(req, matched_pages=len(mpages))
-
-            def supply(pins):
-                # free + evictable AFTER this admission pins its matched /
-                # COW-source pages: a currently refcount-0 cached page the
-                # request itself is about to hold must not be counted as
-                # reclaimable supply for its own allocation
-                held = sum(1 for p in set(pins) if self._ref[p] == 0)
-                return len(self._free) + self._evictable() - held
-
-            if cow is not None and need > supply(mpages + [cow[0]]):
-                cow = None  # pinning the COW source would leave the pool
-                # short one page: forgo the partial-page reuse (it is an
-                # optimization; the full-page match alone always fits)
-            if need > supply(mpages):
-                break  # strict FIFO: head of line waits for pages
-            self.queue.popleft()
-            for p in mpages:
-                self._ref[p] += 1
-            if cow is not None:
-                self._ref[cow[0]] += 1  # pin the COW source vs eviction
-                cow_pins.append(cow[0])
-            alloc = self._alloc(need)
-            for p in alloc:
-                self._ref[p] += 1
-            if cow is not None:
-                cow_src[b], cow_dst[b] = cow[0], alloc[0]
-                matched += cow[1]
-                n_cow += 1
-            pages = mpages + alloc
-            rows[b, :len(pages)] = pages
-            plen[b] = matched
-            s = _Slot(req, pages, fill=matched, node=node,
-                      n_indexed=len(mpages))
-            if matched >= len(req.prompt):
-                # whole prompt cached: straight to decode, same resume
-                # scheme as a completed prefill (last token, position L)
-                s.pos = len(req.prompt)
-                s.last_tok = int(req.prompt[-1])
-            self.slots[b] = s
-            mask[b] = True
-            self.stats["admissions"] += 1
-            if matched:
-                self.stats["prefix_hits"] += 1
-                self.stats["prefix_tokens_reused"] += matched
-        if mask.any():
-            self.stats["pages_in_use_peak"] = max(
-                self.stats["pages_in_use_peak"], int((self._ref > 0).sum()))
-            if n_cow:
-                # device-side ordering is by data dependency (copy feeds the
-                # reset feeds the tick), so the host may unpin right away
-                state = self._copy(state, cow_src, cow_dst)
-                self.stats["cow_copies"] += n_cow
-            self._release_pages(cow_pins)
-            state = self._reset(state, self._template, mask, rows, plen)
-        return state
 
     # -- sampling / bookkeeping -------------------------------------------
     def _sample(self, req: Request, logits_row: np.ndarray) -> int:
@@ -555,10 +513,11 @@ class ServeEngine:
         req = s.req
         req.out_tokens.append(tok)
         s.pos += 1
-        self.token_log.append((req.uid, self.stats["ticks"],
+        self.token_log.append((req.uid, self._stats["ticks"],
                                time.perf_counter()))
         if (len(req.out_tokens) >= req.max_tokens
                 or (req.eos_id is not None and tok == req.eos_id)):
+            req.done = True
             results[req.uid] = req.out_tokens
             self.completion_order.append(req.uid)
             self._release_slot(b)
@@ -569,11 +528,13 @@ class ServeEngine:
     def _ragged_tick(self, state):
         """Pack one token budget and run the single ragged program.
 
-        Decode first (no decoding slot ever stalls), then prefill chunks in
-        slot order until the budget runs out; a slot whose prompt completes
-        in this pack appends its first decode token right behind it.  Slots
-        admitted on a full prefix hit enter the decode section on their very
-        first tick — the whole prefill phase is skipped."""
+        Decode first (no decoding slot ever stalls), then prefill chunks
+        until the budget runs out; WITHIN each section the scheduler's
+        pack order decides which slot's tokens take the budget first (FIFO:
+        slot-index order, bit-identical to PR 2-4).  A slot whose prompt
+        completes in this pack appends its first decode token right behind
+        it.  Slots admitted on a full prefix hit enter the decode section
+        on their very first tick — the whole prefill phase is skipped."""
         T, W = self.budget, self.chunk + 1
         tokens = np.zeros(T, np.int32)
         slot = np.zeros(T, np.int32)
@@ -583,9 +544,22 @@ class ServeEngine:
         logit_idx = np.full(self.B, T, np.int32)
         n = 0
         sampling: List[int] = []
-        for b, s in enumerate(self.slots):
-            if s is None or s.fill < len(s.req.prompt):
-                continue
+        ready = [b for b, s in enumerate(self.slots)
+                 if s is not None and s.fill >= len(s.req.prompt)]
+        filling = [b for b, s in enumerate(self.slots)
+                   if s is not None and s.fill < len(s.req.prompt)]
+        if self._default_pack:
+            decode_order, prefill_order = ready, filling
+        else:
+            view = self._view(include_queue=False)
+            decode_order = self._pack_order(
+                self.scheduler.decode_order(view, ready), ready,
+                "decode_order")
+            prefill_order = self._pack_order(
+                self.scheduler.prefill_order(view, filling), filling,
+                "prefill_order")
+        for b in decode_order:
+            s = self.slots[b]
             tokens[n] = s.last_tok
             slot[n] = b
             q_pos[n] = s.pos
@@ -594,12 +568,11 @@ class ServeEngine:
             logit_idx[b] = n
             sampling.append(b)
             n += 1
-        for b, s in enumerate(self.slots):
-            if s is None:
-                continue
+        for b in prefill_order:
+            if n >= T:
+                break
+            s = self.slots[b]
             L = len(s.req.prompt)
-            if s.fill >= L or n >= T:
-                continue
             c = min(self.chunk, L - s.fill, T - n)
             tokens[n:n + c] = s.req.prompt[s.fill:s.fill + c]
             slot[n:n + c] = b
@@ -628,8 +601,8 @@ class ServeEngine:
             return state, results
         logits, state = self._ragged_step(self.params, state, tokens, slot,
                                           q_pos, seq_idx, valid, logit_idx)
-        self.stats["ragged_ticks"] += 1
-        self.stats["packed_tokens"] += n
+        self._stats["ragged_ticks"] += 1
+        self._stats["packed_tokens"] += n
         if sampling:
             rows = np.asarray(logits)  # (B, V)
             for b in sampling:
@@ -661,7 +634,7 @@ class ServeEngine:
                 s.pos = L
                 s.last_tok = int(s.req.prompt[-1])
         _, state = self._chunk_step(self.params, state, tokens, q_pos, valid)
-        self.stats["chunk_ticks"] += 1
+        self._stats["chunk_ticks"] += 1
         return state
 
     def _decode_tick(self, state):
@@ -677,7 +650,7 @@ class ServeEngine:
         logits, state = self._decode_step(self.params, state, tokens, q_pos,
                                           valid)
         rows = np.asarray(logits[:, -1])
-        self.stats["decode_ticks"] += 1
+        self._stats["decode_ticks"] += 1
         results: Dict[int, List[int]] = {}
         for b, s in enumerate(self.slots):
             if s is None:
@@ -706,8 +679,9 @@ class ServeEngine:
     def tick(self) -> Dict[int, List[int]]:
         """One scheduling tick: admit from the queue, pack, run one program
         step.  Returns the requests that finished this tick ({uid: tokens}).
-        Public so continuous-arrival drivers (benchmarks/serve_sweep.py) can
-        interleave ``submit`` with serving instead of draining a batch."""
+        Public so continuous-arrival drivers (benchmarks/serve_sweep.py) and
+        ``RequestHandle.tokens()`` iterators can interleave ``submit`` with
+        serving instead of draining a batch."""
         self._ensure_state()
         self._state = self._admit(self._state)
         had_prefill = any(s is not None and s.fill < len(s.req.prompt)
@@ -719,7 +693,7 @@ class ServeEngine:
             self._state = self._prefill_tick(self._state)
         elif any(s is not None for s in self.slots):
             self._state, results = self._decode_tick(self._state)
-        self.stats["ticks"] += 1
+        self._stats["ticks"] += 1
         self.tick_log.append((had_prefill, time.perf_counter()))
         return results
 
@@ -736,10 +710,12 @@ class ServeEngine:
         # submitted uid is present in the result
         for b, s in enumerate(self.slots):
             if s is not None:
+                s.req.done = True
                 results[s.req.uid] = s.req.out_tokens
                 self._release_slot(b)
         while self.queue:
             req = self.queue.popleft()
+            req.done = True
             results[req.uid] = req.out_tokens
             self._rngs.pop(req.uid, None)
         return results

@@ -11,7 +11,6 @@ on equal-length traffic; ``benchmarks/serve_sweep.py`` scores the speedup.
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -21,21 +20,7 @@ import numpy as np
 
 from repro.configs.base import ModelCfg
 from repro.models import model as M
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray  # (S,) int32
-    max_tokens: int = 16
-    eos_id: Optional[int] = None
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-    # sampling (serve.engine only; this reference engine is greedy-only):
-    # temperature == 0 -> greedy argmax; seed defaults to uid at submit
-    temperature: float = 0.0
-    top_k: Optional[int] = None
-    seed: Optional[int] = None
+from repro.serve.handle import Request  # noqa: F401  (moved; re-exported)
 
 
 class ReferenceEngine:

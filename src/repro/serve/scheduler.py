@@ -1,0 +1,266 @@
+"""Scheduler — the serving stack's pluggable workload-policy layer.
+
+The paper's grid result (every Nproc × Nthread mix stays near peak once the
+system settings are fixed) holds because the resource-management layer is
+UNIFORM beneath diverse workloads.  The serving analogue: `serve.pool.
+PagePool` (the settings layer) and the engine's single compiled program are
+fixed, and everything workload-shaped — WHICH queued request is admitted
+next, and in WHAT ORDER slots contribute tokens to a tick's pack — is a
+policy object behind this module's ``Scheduler`` protocol.  Swapping the
+policy never touches memory management or the compiled step, so every
+policy inherits the no-mid-flight-OOM and one-trace guarantees.
+
+A scheduler sees a read-only ``EngineView`` snapshot and returns ORDERINGS;
+the engine keeps all mechanism (feasibility checks, page reservation,
+chunking, budget accounting).  Two invariants the engine enforces no matter
+the policy:
+
+- **Admission stops at the first infeasible candidate** — a request is
+  admitted only when the pages it actually needs (its unmatched suffix
+  after the prefix match) fit in free + evictable supply, so no policy can
+  cause a mid-flight OOM or strand the pool.
+- **Every decoding slot packs one token per tick** (``token_budget >=
+  batch_size``) — reordering decides priority within the pack, never
+  whether a decoder stalls.
+
+Policies:
+
+- ``FifoScheduler`` — strict arrival order, slot-index pack order.  This is
+  bit-identical to the pre-refactor engine (PR 1–4): same queue walk, same
+  page-allocator call sequence, same pack layout, token-for-token.
+- ``PrefixAwareScheduler`` — reorders a bounded window at the head of the
+  queue (``depth``) so requests sharing a cached or in-flight prefix land
+  in the same admission wave: the window is grouped by prefix family (first
+  full page of the prompt — exactly the trie's first key), warm families
+  (longest indexed match, probed without touching LRU state) first so a
+  resident prefix is reused before eviction pressure can reclaim it, cold
+  families kept contiguous so the family head indexes pages its siblings
+  hit in-flight a tick later.  Fairness degrades gracefully: order beyond
+  the window is untouched, and a head of line displaced ``max_bypass``
+  times — actually overtaken, OR stuck behind a never-admitting proposal —
+  pins the next round to strict FIFO, so no request waits more than a
+  bounded number of admission rounds beyond its FIFO turn.
+- ``SloScheduler`` — interactive-vs-batch classes from ``Request.priority``
+  (>= 1 = interactive): interactive requests admit first within a bounded
+  window, and interactive slots' prefill chunks take the leftover budget
+  ahead of batch documents', so an interactive arrival's
+  time-to-first-token never queues behind a batch prefill.  (Decode needs
+  no ordering: the engine invariant ``token_budget >= batch_size`` packs
+  every ready slot's token every tick regardless.)  Within a class, FIFO.
+  Under a saturating interactive stream a batch head of line is bypassed
+  at most ``max_bypass`` times before a strict-FIFO round admits it —
+  priority inverts latency, never liveness.
+
+``benchmarks/serve_sweep.py:scheduler_ab_scenario`` A/Bs the three on mixed
+shared-prefix Poisson traffic; ``core.autotune.select_serve_defaults``
+carries a ``scheduler`` axis so the tuned-once serving config names its
+policy alongside token_budget / page_size / kv_dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.handle import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineView:
+    """Read-only snapshot the engine hands a scheduler each consultation.
+
+    ``queue``/``slot_requests`` reference live ``Request`` objects —
+    schedulers must treat them as immutable.  ``match_len`` is
+    ``PagePool.probe_prefix_len``: tokens of a prompt covered by indexed
+    full pages, probed WITHOUT mutating LRU state.
+
+    For ``decode_order``/``prefill_order`` consultations ``queue`` is
+    EMPTY: pack ordering is a slots concern, and snapshotting a deep
+    backlog every tick would tax the hot loop for nothing.  The full queue
+    is present for ``admission_order``."""
+
+    queue: Tuple[Request, ...]
+    slot_requests: Tuple[Optional[Request], ...]  # None = free slot
+    slot_fill: Tuple[int, ...]  # prompt tokens already in cache, per slot
+    budget: int
+    chunk: int
+    page_size: int
+    match_len: Callable[[np.ndarray], int]
+
+
+class Scheduler:
+    """Protocol + neutral defaults (identity orderings == FIFO).
+
+    Subclass and override any subset; returned orderings may be lazy
+    sequences.  ``admission_order`` returns indices into ``view.queue``
+    (a permutation prefix is fine — omitted indices just wait);
+    ``decode_order``/``prefill_order`` reorder the slot-id lists the engine
+    computed (return them unchanged for slot-index order)."""
+
+    name = "scheduler"
+
+    def admission_order(self, view: EngineView) -> Sequence[int]:
+        return range(len(view.queue))
+
+    def decode_order(self, view: EngineView,
+                     ready: Sequence[int]) -> Sequence[int]:
+        return ready
+
+    def prefill_order(self, view: EngineView,
+                      filling: Sequence[int]) -> Sequence[int]:
+        return filling
+
+
+class FifoScheduler(Scheduler):
+    """Strict arrival-order admission, slot-index pack order — the PR 1–4
+    behavior, bit-identical (the identity policy)."""
+
+    name = "fifo"
+
+
+class _BoundedReorderScheduler(Scheduler):
+    """Shared fairness bookkeeping for window-reordering policies.
+
+    Subclasses implement ``_reorder(view)`` (any permutation of the queue
+    indices that leaves order beyond ``depth`` untouched); this base
+    guarantees the head of line waits at most ``max_bypass`` rounds of
+    EITHER kind of displacement before strict-FIFO rounds pin it to the
+    front:
+
+    - **overtakes** — some request the proposal ranked ahead of the head
+      left the queue by the next consultation (admitted past it; a
+      cancellation is miscounted — conservative and rare);
+    - **stalls** — consecutive proposal rounds in which nobody was
+      admitted at all.  Counting these is what makes the bound a LIVENESS
+      guarantee: admission stops at the first infeasible candidate, so a
+      reorder that ranks an infeasible request ahead of a feasible head
+      would otherwise block the head indefinitely on an identical,
+      never-progressing proposal.  An overtake (real progress) resets the
+      stall count, so interleaved progress keeps the policy reordering.
+
+    Both budgets refresh when the head is admitted (the head changes), so
+    the backstop degrades a round to FIFO, never the policy."""
+
+    def __init__(self, depth: int, max_bypass: int):
+        if depth < 1 or max_bypass < 1:
+            raise ValueError(f"bad bounds ({depth=}, {max_bypass=})")
+        self.depth = depth
+        self.max_bypass = max_bypass
+        self._head_uid = None  # current head of line...
+        self._overtakes = 0  # ...how often it was actually bypassed...
+        self._stalls = 0  # ...and consecutive no-progress proposals
+        self._proposed: Optional[frozenset] = None  # other uids at proposal
+
+    def _reorder(self, view: EngineView) -> List[int]:
+        raise NotImplementedError
+
+    def admission_order(self, view: EngineView) -> Sequence[int]:
+        q = view.queue
+        if not q:
+            return ()
+        if q[0].uid != self._head_uid:
+            # head admitted (or cancelled): fresh budget for the new head
+            self._head_uid = q[0].uid
+            self._overtakes = self._stalls = 0
+            self._proposed = None
+        elif self._proposed is not None:
+            live = {r.uid for r in q}
+            if any(u not in live for u in self._proposed):
+                self._overtakes += 1
+                self._stalls = 0
+            else:
+                self._stalls += 1
+            self._proposed = None
+        if max(self._overtakes, self._stalls) >= self.max_bypass:
+            return range(len(q))  # fairness backstop: strict FIFO rounds
+            # until this head finally admits (then the head change resets)
+        order = self._reorder(view)
+        if order and order[0] != 0:
+            self._proposed = frozenset(r.uid for r in q[1:])
+        return order
+
+
+class PrefixAwareScheduler(_BoundedReorderScheduler):
+    """Group the admission window by shared-prefix family (see module
+    docstring).  ``depth`` bounds reordering; ``max_bypass`` bounds how
+    many times the head of line can actually be overtaken."""
+
+    name = "prefix-aware"
+
+    def __init__(self, depth: int = 8, max_bypass: int = 4):
+        super().__init__(depth, max_bypass)
+
+    def _reorder(self, view: EngineView) -> List[int]:
+        q = view.queue
+        D = min(self.depth, len(q))
+        P = view.page_size
+        # family key = the trie's first key (first FULL prompt page);
+        # sub-page prompts can never share pages -> singleton families
+        def family(r: Request):
+            return (tuple(int(t) for t in r.prompt[:P])
+                    if len(r.prompt) >= P else ("solo", r.uid))
+
+        groups: Dict[tuple, List[int]] = {}
+        for i in range(D):
+            groups.setdefault(family(q[i]), []).append(i)
+        # warm families first (their prefix is resident NOW — reuse it
+        # before eviction pressure reclaims it), then FIFO by earliest
+        # member; members stay in FIFO order within their family
+        ranked = sorted(groups.values(),
+                        key=lambda g: (-max(view.match_len(q[i].prompt)
+                                            for i in g), g[0]))
+        return [i for g in ranked for i in g] + list(range(D, len(q)))
+
+
+class SloScheduler(_BoundedReorderScheduler):
+    """Interactive-first admission and prefill packing by
+    ``Request.priority`` (stable within a class, so each class is FIFO).
+    ``depth`` bounds how far an interactive arrival may jump the admission
+    queue; ``max_bypass`` bounds how many times a batch head of line can
+    actually be jumped (the shared backstop — a saturating interactive
+    stream may otherwise keep refilling the window).  ``decode_order`` is
+    deliberately NOT overridden: every ready slot packs one decode token
+    per tick whatever the order (engine invariant), so reordering there
+    would change nothing but cost the hot loop a per-tick view."""
+
+    name = "slo"
+
+    def __init__(self, depth: int = 16, max_bypass: int = 4):
+        super().__init__(depth, max_bypass)
+
+    def _reorder(self, view: EngineView) -> List[int]:
+        q = view.queue
+        D = min(self.depth, len(q))
+        window = sorted(range(D), key=lambda i: (-q[i].priority, i))
+        return window + list(range(D, len(q)))
+
+    def prefill_order(self, view: EngineView,
+                      filling: Sequence[int]) -> Sequence[int]:
+        return sorted(filling,
+                      key=lambda b: (-view.slot_requests[b].priority, b))
+
+
+SCHEDULERS = {
+    "fifo": FifoScheduler,
+    "prefix-aware": PrefixAwareScheduler,
+    "slo": SloScheduler,
+}
+
+
+def make_scheduler(spec) -> Scheduler:
+    """Resolve the engine's ``scheduler=`` argument: None -> FIFO, a name
+    from ``SCHEDULERS``, or a ready policy object (duck-typed — anything
+    with the three ordering methods)."""
+    if spec is None:
+        return FifoScheduler()
+    if isinstance(spec, str):
+        try:
+            return SCHEDULERS[spec]()
+        except KeyError:
+            raise ValueError(f"unknown scheduler {spec!r} "
+                             f"(pick from {sorted(SCHEDULERS)})") from None
+    for method in ("admission_order", "decode_order", "prefill_order"):
+        if not callable(getattr(spec, method, None)):
+            raise TypeError(f"scheduler {spec!r} lacks {method}()")
+    return spec

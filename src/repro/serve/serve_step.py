@@ -12,13 +12,15 @@ Two step builders live here:
   data, which is what keeps the program count at exactly one regardless of
   traffic.
 
-The engine's prefix cache adds no step builder: sharing is an allocator
-concern.  Block-table rows of several slots may alias one pool page; the
-ragged step reads KV through ptab either way, admission presets kpos/slen
-for inherited positions via ``models.model.reset_paged_slots`` (a separate
-control-plane program, like the COW page copy
-``models.model.copy_kv_pages``), and the serve-path trace count stays at
-exactly one.
+Neither the engine's prefix cache nor its pluggable scheduler adds a step
+builder: sharing is an allocator concern (``serve.pool.PagePool``) and
+scheduling is a host-side ORDERING concern (``serve.scheduler``) — a policy
+only permutes which (slot, position) pairs fill the pack vectors.  Block-
+table rows of several slots may alias one pool page; the ragged step reads
+KV through ptab either way, admission presets kpos/slen for inherited
+positions via ``models.model.reset_paged_slots`` (a separate control-plane
+program, like the COW page copy ``models.model.copy_kv_pages``), and the
+serve-path trace count stays at exactly one for every policy.
 
 ``STATE_AXES`` names the logical axes of every decode-state leaf — the
 lock-step cache (k/v/k_pos/pos) and the ragged/paged engine's leaves (kp/vp

@@ -71,6 +71,29 @@ except ImportError:
         def booleans():
             return _strategies.sampled_from([False, True])
 
+        @staticmethod
+        def tuples(*strategies):
+            def draw(i, rnd):
+                return tuple(s.example_at(i, rnd) for s in strategies)
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=10):
+            def draw(i, rnd):
+                if i == 0:
+                    n = min_size
+                elif i == 1:
+                    n = max_size
+                else:
+                    n = rnd.randint(min_size, max_size)
+                # random per-element indices: bound-only draws would make
+                # every list a constant repetition
+                return [elements.example_at(rnd.randint(0, _N_EXAMPLES + 2),
+                                            rnd) for _ in range(n)]
+
+            return _Strategy(draw)
+
     st = _strategies()
 
     def settings(*_a, **_kw):  # noqa: D401 - mirror hypothesis.settings
@@ -91,11 +114,12 @@ except ImportError:
             for i in range(_N_EXAMPLES):
                 cases.append(tuple(strategy_kw[n].example_at(i, rnd)
                                    for n in names))
-            # dedupe (tiny domains can repeat the bound cases)
+            # dedupe (tiny domains can repeat the bound cases); key by repr —
+            # drawn values may be unhashable (lists)
             seen, uniq = set(), []
             for c in cases:
-                if c not in seen:
-                    seen.add(c)
+                if repr(c) not in seen:
+                    seen.add(repr(c))
                     uniq.append(c)
 
             def wrapper(*args, **kw):

@@ -28,9 +28,10 @@ print("OK", out["best"]["candidate"], out["best"]["dominant"])
 
 def test_select_serve_defaults_emits_one_config():
     """The serving-time analogue of the paper's tuned-once config: the sweep
-    emits exactly one (token_budget, prefill_chunk, page_size, kv_dtype)
-    whose worst traffic-mix point is the best worst-case across the grid —
-    ONE config that now also picks the memory representation."""
+    emits exactly one (token_budget, prefill_chunk, page_size, kv_dtype,
+    scheduler) whose worst traffic-mix point is the best worst-case across
+    the grid — ONE config that also picks the memory representation and the
+    scheduling policy."""
     from repro.core.autotune import select_serve_defaults
 
     out = select_serve_defaults("qwen2-1.5b", smoke=True, context_len=100)
@@ -39,10 +40,11 @@ def test_select_serve_defaults_emits_one_config():
     assert best["prefill_chunk"] in (16, 32, 64)
     assert best["page_size"] in (8, 16, 32)
     assert best["kv_dtype"] in ("float32", "bfloat16", "int8")
+    assert best["scheduler"] in ("fifo", "prefix-aware", "slo")
     assert 0.0 < best["score"] <= 1.0
     # full grid evaluated (chunks must leave decode room in the budget)
     n_valid = sum(1 for tb in (64, 128, 256) for pc in (16, 32, 64)
-                  if pc < tb) * 3 * 3
+                  if pc < tb) * 3 * 3 * 3
     assert len(table) == n_valid
     # max-min selection: nobody beats the winner's worst-case fraction
     assert all(r["score"] <= best["score"] + 1e-12 for r in table)

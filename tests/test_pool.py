@@ -1,0 +1,186 @@
+"""PagePool unit tests — the memory-settings layer in isolation.
+
+The point of the three-layer split: every page policy (refcounts, prefix
+trie, COW matching, LRU eviction, admission supply) is testable here in
+microseconds with NO model, NO jax arrays, NO engine — just integer page
+ids.  The engine-level behavior these policies produce is covered by
+tests/test_serve.py and tests/test_serve_api.py."""
+import numpy as np
+import pytest
+
+from repro.serve.pool import PagePool, kv_bytes_per_token, kv_page_bytes
+
+
+def _prompt(*toks):
+    return np.asarray(toks, np.int32)
+
+
+def _chain(pool, tokens, page_size=4):
+    """Index ``tokens`` (a multiple of page_size) as a cached chain of
+    freshly allocated pages; returns the pages (refcount 1, caller owns)."""
+    assert len(tokens) % page_size == 0
+    node = pool.root
+    pages = pool.alloc(len(tokens) // page_size)
+    for j, p in enumerate(pages):
+        key = tuple(tokens[j * page_size:(j + 1) * page_size])
+        node = pool.index_page(node, key, p)
+        assert node is not None
+    return pages
+
+
+# ---------------------------------------------------------------------------
+# Allocation / refcounts
+
+
+def test_alloc_release_roundtrip():
+    pool = PagePool(6, 4)
+    pages = pool.alloc(4)
+    assert len(pages) == len(set(pages)) == 4
+    assert pool.free_pages == 2
+    assert all(pool.ref(p) == 1 for p in pages)
+    pool.share(pages[:2])
+    assert [pool.ref(p) for p in pages] == [2, 2, 1, 1]
+    pool.release(pages)
+    assert [pool.ref(p) for p in pages] == [1, 1, 0, 0]
+    assert pool.free_pages == 4  # unindexed ref-0 pages free immediately
+    pool.release(pages[:2])
+    assert pool.free_pages == 6
+    assert pool.reclaimable_pages == pool.n_pages
+
+
+def test_over_release_asserts():
+    pool = PagePool(2, 4)
+    [p] = pool.alloc(1)
+    pool.release([p])
+    with pytest.raises(AssertionError):
+        pool.release([p])
+
+
+def test_alloc_beyond_supply_raises():
+    pool = PagePool(2, 4)
+    pool.alloc(2)
+    with pytest.raises(RuntimeError):
+        pool.alloc(1)  # nothing free, nothing evictable
+
+
+# ---------------------------------------------------------------------------
+# Prefix trie: match, index ownership, COW candidates
+
+
+def test_match_prefix_full_pages_and_cow():
+    pool = PagePool(8, 4)
+    pages = _chain(pool, [1, 2, 3, 4, 5, 6, 7, 8])
+    pool.release(pages)  # indexed: stays cached at refcount 0
+    assert pool.cached_pages == 2 and pool.free_pages == 6
+
+    node, hit, matched, cow = pool.match_prefix(
+        _prompt(1, 2, 3, 4, 5, 6, 7, 8, 9))
+    assert hit == pages and matched == 8 and cow is None
+    # diverging mid-page: 2 full pages... no wait, diverges inside page 2
+    node, hit, matched, cow = pool.match_prefix(_prompt(1, 2, 3, 4, 5, 6, 99))
+    assert hit == [pages[0]] and matched == 4
+    assert cow == (pages[1], 2)  # lcp(5,6 | 5,6,7,8) = 2 extra tokens
+    # no shared tokens at all
+    node, hit, matched, cow = pool.match_prefix(_prompt(9, 9, 9, 9, 9))
+    assert hit == [] and matched == 0 and cow is None
+
+
+def test_index_page_ownership_conflict():
+    """A second, byte-identical page never displaces the index owner — the
+    caller learns to stop indexing (None) and keeps its private copy."""
+    pool = PagePool(4, 4)
+    pages = _chain(pool, [1, 2, 3, 4])
+    [dup] = pool.alloc(1)
+    assert pool.index_page(pool.root, (1, 2, 3, 4), dup) is None
+    assert pool.cached_pages == 1  # still just the original
+    pool.release(pages)
+    pool.release([dup])
+    assert pool.free_pages == 3 and pool.cached_pages == 1
+
+
+def test_probe_prefix_len_matches_and_does_not_touch_lru():
+    pool = PagePool(8, 4)
+    a = _chain(pool, [1, 2, 3, 4])
+    b = _chain(pool, [5, 6, 7, 8])
+    pool.release(a)
+    pool.release(b)
+    assert pool.probe_prefix_len(_prompt(1, 2, 3, 4, 9)) == 4
+    assert pool.probe_prefix_len(_prompt(9, 1, 2, 3)) == 0
+    # a MUTATING match on `a` makes it most-recently-used...
+    pool.match_prefix(_prompt(1, 2, 3, 4))
+    # ...then probing `b` must NOT refresh it: b is still the LRU victim
+    pool.probe_prefix_len(_prompt(5, 6, 7, 8))
+    pool.alloc(7)  # forces one eviction
+    assert pool.cached_pages == 1
+    assert pool.probe_prefix_len(_prompt(1, 2, 3, 4)) == 4  # a survived
+    assert pool.probe_prefix_len(_prompt(5, 6, 7, 8)) == 0  # b evicted
+
+
+# ---------------------------------------------------------------------------
+# Eviction: LRU over refcount-0, leaf-first
+
+
+def test_evict_lru_leaf_first():
+    pool = PagePool(4, 4)
+    pages = _chain(pool, [1, 2, 3, 4, 5, 6, 7, 8])  # one 2-page chain
+    pool.release(pages)
+    assert pool.evictable() == 2
+    assert pool.evict_one()
+    # leaf first: the root child (page 0 of the chain) must survive
+    assert pool.probe_prefix_len(_prompt(1, 2, 3, 4, 5, 6, 7, 8)) == 4
+    assert pool.stats["evictions"] == 1
+    assert pool.evict_one() and not pool.evict_one()
+    assert pool.free_pages == 4 and pool.cached_pages == 0
+
+
+def test_pinned_pages_never_evicted():
+    pool = PagePool(4, 4)
+    pages = _chain(pool, [1, 2, 3, 4, 5, 6, 7, 8])
+    pool.release([pages[1]])  # leaf ref 0; root of chain still held
+    assert pool.evictable() == 1
+    assert pool.evict_one() and not pool.evict_one()  # only the leaf goes
+    assert pool.ref(pages[0]) == 1 and pool.cached_pages == 1
+    pool.release([pages[0]])
+    assert pool.drop_cache() == 1
+    assert pool.free_pages == 4
+
+
+def test_available_discounts_callers_own_pins():
+    """The admission corner from PR 3 review, now a one-liner on the pool:
+    a refcount-0 cached page the request itself is about to pin must not be
+    counted as reclaimable supply for its own allocation."""
+    pool = PagePool(4, 4)
+    pages = _chain(pool, [1, 2, 3, 4, 5, 6, 7, 8])
+    pool.release(pages)
+    assert pool.available() == 4  # 2 free + 2 evictable
+    assert pool.available(pinned=pages) == 2
+    assert pool.available(pinned=[pages[0], pages[0]]) == 3  # dedup
+    pool.share([pages[0]])  # someone else holds it -> not supply either way
+    # 2 free + 1 evictable - 1 self-pinned (the still-ref-0 leaf)
+    assert pool.available(pinned=pages) == 2
+
+
+def test_index_disabled_degrades_to_plain_allocator():
+    pool = PagePool(4, 4, index_enabled=False)
+    pages = pool.alloc(2)
+    assert pool.index_page(pool.root, (1, 2, 3, 4), pages[0]) is None
+    node, hit, matched, cow = pool.match_prefix(_prompt(1, 2, 3, 4))
+    assert (hit, matched, cow) == ([], 0, None)
+    assert pool.probe_prefix_len(_prompt(1, 2, 3, 4)) == 0
+    pool.release(pages)
+    assert pool.free_pages == 4 and pool.cached_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# Byte-denominated budgeting
+
+
+def test_kv_byte_pricing_linear_and_int8_smaller():
+    from repro.configs import get_config
+
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    for dt in ("float32", "bfloat16", "int8"):
+        assert kv_page_bytes(cfg, 8, dt) == 8 * kv_bytes_per_token(cfg, dt)
+    # the byte budget's whole premise: int8 pages cost >= 2x less
+    assert 2 * kv_page_bytes(cfg, 8, "int8") <= kv_page_bytes(
+        cfg, 8, "float32")

@@ -371,6 +371,19 @@ def test_page_pool_returns_to_initial_after_three_waves(qwen):
         assert len(eng._free) + eng.cached_pages == eng.n_pages
         # next wave terminates via EOS on a token the model actually emits
         eos = got[uids[0]][0]
+    # wave 4: cancellations mid-flight — one admitted request cancelled
+    # after its first tick, one cancelled while still queued; hygiene must
+    # hold exactly as for completed waves
+    prompts = _prompts(cfg, [9, 17, 12], seed=53)
+    handles = [eng.submit(p, max_tokens=4) for p in prompts]
+    extra = eng.submit(prompts[0], max_tokens=4)  # queued: 3 slots taken
+    eng.tick()
+    assert handles[1].cancel() and extra.cancel()
+    got = eng.run()
+    assert sorted(got) == sorted([handles[0], handles[2]])
+    assert not any(eng.slots)
+    assert (eng._ref == 0).all()
+    assert eng.reclaimable_pages == eng.n_pages
     # dropping the cache returns every page to the free list
     eng.drop_prefix_cache()
     assert len(eng._free) == eng.n_pages and eng.cached_pages == 0
