@@ -54,8 +54,12 @@ def evaluate(arch: str, shape_name: str, mesh, candidates=DEFAULT_CANDIDATES,
             **{k: terms[k] for k in ("compute_s", "memory_s", "collective_s")},
         })
     ok = [r for r in rows if r.get("fits_hbm")]
+    # Candidate name is an explicit tie-break: float-equal step bounds (e.g.
+    # two remat modes that lower to the same HLO on this backend) would
+    # otherwise rank in dict/insertion order, which varies with the
+    # environment that produced the rows.
     ranked = sorted(ok or [r for r in rows if "error" not in r],
-                    key=lambda r: r["step_bound_s"])
+                    key=lambda r: (r["step_bound_s"], r["candidate"]))
     for i, r in enumerate(ranked):
         r["rank"] = i
     return rows
@@ -64,7 +68,8 @@ def evaluate(arch: str, shape_name: str, mesh, candidates=DEFAULT_CANDIDATES,
 def select_defaults(arch: str, shape_name: str, mesh, **kw) -> Dict:
     rows = evaluate(arch, shape_name, mesh, **kw)
     best = min((r for r in rows if "error" not in r),
-               key=lambda r: (not r.get("fits_hbm", False), r["step_bound_s"]))
+               key=lambda r: (not r.get("fits_hbm", False), r["step_bound_s"],
+                              r["candidate"]))
     return {"best": best, "table": rows}
 
 
@@ -108,6 +113,7 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
                           page_sizes=(8, 16, 32),
                           kv_dtypes=("float32", "bfloat16", "int8"),
                           schedulers=("fifo", "prefix-aware", "slo"),
+                          device_counts=(1,),
                           shared_frac: float = 0.75, gen_tokens: int = 32,
                           hw: HwSpec = V5E, smoke: bool = False) -> Dict:
     """Emit ONE tuned serving config for ``serve.ServeEngine``.
@@ -149,6 +155,14 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
     throughput, prefix-aware gives up the interactive jump; fifo gives up
     both and can never win the axis).  benchmarks/serve_sweep.py records
     the selection next to the measured rows in BENCH_serve.json.
+
+    ``device_counts`` adds the KV-head tensor-parallel axis (ServeEngine
+    ``mesh=``): each count is threaded to ``mixed_bound(n_devices=...)``,
+    which divides the paged-layer attention FLOPs and KV byte terms but not
+    the replicated parameter sweep — so the tuner sees exactly where TP
+    stops paying (once the per-device bound goes param-dominated).  The
+    default ``(1,)`` keeps the single-device grid (and table size)
+    unchanged; rows and ``best`` carry ``n_devices`` either way.
     """
     from repro.configs import get_config
     from repro.core.roofline import mixed_bound
@@ -178,14 +192,15 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
             if pc >= tb:
                 continue  # a chunk that fills the whole budget starves decode
             for ps in page_sizes:
-                for kvd in kv_dtypes:
+                for kvd, ndev in ((kvd, ndev) for kvd in kv_dtypes
+                                  for ndev in device_counts):
                     tps = {}
                     blend_tick_s = 1e-30
                     blend_tps = 0.0
                     for name, nd, npf, ctx in mix_points(tb, pc):
                         r = mixed_bound(cfg, n_decode=nd, n_prefill=npf,
                                         context_len=ctx, hw=hw, page_size=ps,
-                                        kv_dtype=kvd)
+                                        kv_dtype=kvd, n_devices=ndev)
                         tps[name] = r["tokens_per_s"]
                         if name == "blend@doc":
                             blend_tick_s = max(r["tick_s"], 1e-30)
@@ -216,7 +231,8 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
                             * (1 + model["interactive_wait"] * prefill_ticks))
                         rows.append({"token_budget": tb, "prefill_chunk": pc,
                                      "page_size": ps, "kv_dtype": kvd,
-                                     "scheduler": sched, "criteria": crit})
+                                     "scheduler": sched, "n_devices": ndev,
+                                     "criteria": crit})
     if not rows:
         raise ValueError("no valid (token_budget, prefill_chunk, page_size, "
                          "kv_dtype, scheduler) candidate for the given grids")
@@ -231,6 +247,6 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
     best = max(rows, key=lambda r: (r["score"], r["mean_fraction"]))
     return {"best": {k: best[k] for k in ("token_budget", "prefill_chunk",
                                           "page_size", "kv_dtype",
-                                          "scheduler", "score",
+                                          "scheduler", "n_devices", "score",
                                           "mean_fraction")},
             "table": rows}

@@ -136,7 +136,12 @@ class HloCostModel:
         if op == "while":
             names = dict(
                 (k, v) for k, v in re.findall(r"(condition|body)=%?([\w.\-]+)", body))
-            trips = self._trip_count(names.get("condition"))
+            # XLA's loop analysis stamps the resolved trip count into
+            # backend_config — trust it first; fall back to scraping the
+            # largest constant out of the condition computation.
+            tc = re.search(r'"known_trip_count"\s*:\s*\{"n"\s*:\s*"?(\d+)', body)
+            trips = float(tc.group(1)) if tc else self._trip_count(
+                names.get("condition"))
             inner = self._comp_cost(names.get("body", ""))
             c += inner.scaled(trips)
             c.traffic_bytes += res_bytes
@@ -179,10 +184,20 @@ class HloCostModel:
         k = 1
         mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", body)
         if mm:
+            lhs = None
+            # Operand group of the dot: text between the first "(...)".
+            # Operands are usually fully typed ("f32[4,32]{1,0} %arg"), so
+            # the lhs shape is simply the FIRST shape literal in the group —
+            # splitting on "," would break on the layout annotation's commas.
             operands = re.findall(r"\(([^)]*)\)", body)
-            first_ops = operands[0].split(",") if operands else []
-            lhs_name = first_ops[0].strip().lstrip("%") if first_ops else ""
-            lhs = symtab.get(lhs_name)
+            if operands:
+                shp = _shapes(operands[0])
+                if shp:
+                    lhs = shp[0]
+                else:  # untyped operands: "dot(%a, %b)" — fall back to symtab
+                    nm = re.match(r"\s*%?([\w.\-]+)", operands[0])
+                    if nm:
+                        lhs = symtab.get(nm.group(1))
             if lhs and lhs[1] is not None:
                 for d in mm.group(1).split(","):
                     if d:

@@ -105,7 +105,8 @@ def _kv_elem_bytes(kv_dtype, head_dim: int, act_bytes: float) -> float:
 
 
 def decode_bound(cfg, batch: int, context_len: int, hw: HwSpec = V5E,
-                 page_size: int = None, kv_dtype=None) -> Dict:
+                 page_size: int = None, kv_dtype=None,
+                 n_devices: int = 1) -> Dict:
     """Analytic tokens/s upper bound for one batched decode tick.
 
     The serving-engine analogue of the paper's practical-peak line: a decode
@@ -120,6 +121,14 @@ def decode_bound(cfg, batch: int, context_len: int, hw: HwSpec = V5E,
     (the KNL follow-up's regime), so this term is usually the bound.
     benchmarks/serve_sweep.py scores measured engine throughput against
     ``tokens_per_s`` from this bound.
+
+    ``n_devices`` models KV-head tensor parallelism (serve.engine ``mesh=``):
+    each device holds 1/N of the paged KV pools and attends over only its
+    head slice, so the attention FLOPs and KV byte terms divide by N.  The
+    parameter sweep does NOT divide — serving TP replicates the weights
+    (the KV pool, not the params, is what outgrows one device) — which is
+    why decode throughput scales sub-linearly and saturates once the
+    per-device bound goes param-sweep-dominated.
     """
     n_act = active_param_count(cfg)
     param_bytes = n_act * (2 if cfg.param_dtype == "bfloat16" else 4)
@@ -142,10 +151,15 @@ def decode_bound(cfg, batch: int, context_len: int, hw: HwSpec = V5E,
                 if page_size:
                     t_eff = -(-t_eff // page_size) * page_size
                 eb = _kv_elem_bytes(kv_dtype, a.head_dim, act_bytes)
+            # per-device KV-head shard count: only global (paged) layers
+            # shard, and only when the head count divides
+            shards = (n_devices if a.window is None
+                      and a.num_kv_heads % n_devices == 0 else 1)
             # qk^T + pv per query token, grouped heads
-            flops += st.repeats * 4.0 * batch * t_eff * a.num_heads * a.head_dim
+            flops += (st.repeats * 4.0 * batch * t_eff * a.num_heads
+                      * a.head_dim / shards)
             kv_bytes += (st.repeats * 2.0 * batch * t_eff * a.num_kv_heads
-                         * a.head_dim * eb)
+                         * a.head_dim * eb / shards)
 
     t_comp = flops / hw.peak_flops
     t_mem = (param_bytes + kv_bytes) / hw.hbm_bw
@@ -162,7 +176,7 @@ def decode_bound(cfg, batch: int, context_len: int, hw: HwSpec = V5E,
 
 def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
                 hw: HwSpec = V5E, page_size: int = None,
-                kv_dtype=None) -> Dict:
+                kv_dtype=None, n_devices: int = 1) -> Dict:
     """Analytic bound for ONE ragged tick — the decode/prefill roofline blend.
 
     Scores a pack of ``n_decode`` decode tokens + ``n_prefill`` prefill-chunk
@@ -186,6 +200,11 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
     ``speedup_vs_two_phase`` — the bound-level ratio against running the
     same tokens as separate prefill + decode programs.  The serve sweep
     reports measured ragged throughput against this bound.
+
+    ``n_devices`` models KV-head tensor parallelism exactly as in
+    ``decode_bound``: paged-layer attention FLOPs and KV read/write bytes
+    divide by N (when the layer's KV-head count divides), the replicated
+    parameter sweep does not.
     """
     n_act = active_param_count(cfg)
     param_bytes = n_act * (2 if cfg.param_dtype == "bfloat16" else 4)
@@ -208,14 +227,17 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
                     if page_size:
                         t_eff = -(-t_eff // page_size) * page_size
                     eb = _kv_elem_bytes(kv_dtype, a.head_dim, act_bytes)
+                shards = (n_devices if a.window is None
+                          and a.num_kv_heads % n_devices == 0 else 1)
                 # decode tokens see the whole context; prefill tokens see
                 # ~half of it on average (causal positions 0..ctx)
                 q_ctx = n_dec * t_eff + n_pre * t_eff / 2.0
-                flops += st.repeats * 4.0 * q_ctx * a.num_heads * a.head_dim
+                flops += (st.repeats * 4.0 * q_ctx * a.num_heads
+                          * a.head_dim / shards)
                 kv_read += (st.repeats * 2.0 * q_ctx * a.num_kv_heads
-                            * a.head_dim * eb)
+                            * a.head_dim * eb / shards)
                 kv_write += (st.repeats * 2.0 * toks * a.num_kv_heads
-                             * a.head_dim * eb)
+                             * a.head_dim * eb / shards)
         t_comp = flops / hw.peak_flops
         t_mem = (param_bytes + kv_read + kv_write) / hw.hbm_bw
         return t_comp, t_mem, max(t_comp, t_mem, 1e-30), kv_read, kv_write

@@ -148,7 +148,7 @@ def _flash_grouped_fwd_impl(q, k, v, window):
     kernel is a per-device program; GSPMD cannot partition a pallas_call)."""
     from jax.sharding import PartitionSpec as P
 
-    from repro.parallel.sharding import current_mesh, current_rules
+    from repro.parallel.sharding import current_mesh, current_rules, shard_map
 
     mesh = current_mesh()
     if mesh is None:
@@ -156,10 +156,9 @@ def _flash_grouped_fwd_impl(q, k, v, window):
     batch_ax = current_rules().get("act_batch") or None
     qs = P(batch_ax, None, None, None, None)
     kvs = P(batch_ax, None, None, None)
-    return jax.shard_map(
+    return shard_map(
         lambda q, k, v: _flash_grouped_local(q, k, v, window),
-        mesh=mesh, in_specs=(qs, kvs, kvs), out_specs=qs,
-        check_vma=False)(q, k, v)
+        mesh=mesh, in_specs=(qs, kvs, kvs), out_specs=qs)(q, k, v)
 
 
 def _ref_grouped(q, k, v, window):

@@ -96,6 +96,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, save_hlo=None,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     # loop-aware per-device costs (XLA's cost_analysis counts while bodies
     # once — useless for scanned programs; see core/hlo_cost.py)

@@ -76,6 +76,18 @@ def _out_proj(params, cfg: AttnCfg, o):
     return lshard(out, "act_batch", "act_seq", None)
 
 
+def _out_proj_replicated(params, cfg: AttnCfg, o):
+    # Serving-step variant: replicate the attention output BEFORE the
+    # head-contracting einsum.  Under the engine's KV-head TP mesh this is
+    # the single op that contracts across the sharded axis; left to GSPMD it
+    # becomes a partial dot + psum, whose summation order depends on the
+    # device count — replicating first (an exact all-gather) keeps engine
+    # outputs bit-identical across 1/2/4 devices, which the invariance
+    # suite asserts.  No-op without a mesh.
+    o = lshard(o, *([None] * o.ndim))
+    return _out_proj(params, cfg, o)
+
+
 def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
     """(Sq, Sk) additive bias in f32."""
     ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
@@ -375,12 +387,14 @@ def paged_attention_step(params, cfg: AttnCfg, x, cache, q_pos, valid, *,
         cache["slen"], jnp.max(jnp.where(valid, q_pos + 1, 0), axis=1))
 
     if paged and flash_decode and C == 1:
-        from repro.kernels import ops as kops
+        # TP entry point: shard_maps the Pallas kernel over the KV-head axis
+        # under the serving mesh, plain kernel call otherwise
+        from repro.serve.decode_attention import tp_paged_flash_decode
 
-        o = kops.paged_flash_decode(q[:, 0], cache["kp"], cache["vp"],
-                                    cache["ptab"], cache["slen"],
-                                    ks=cache.get("ks"),
-                                    vs=cache.get("vs"))[:, None]
+        o = tp_paged_flash_decode(q[:, 0], cache["kp"], cache["vp"],
+                                  cache["ptab"], cache["slen"],
+                                  ks=cache.get("ks"),
+                                  vs=cache.get("vs"))[:, None]
     elif paged:
         k, v = _gather_paged_kv(cache, q.dtype)
         kvH, hd = cfg.num_kv_heads, cfg.head_dim
@@ -390,7 +404,7 @@ def paged_attention_step(params, cfg: AttnCfg, x, cache, q_pos, valid, *,
     else:
         o = _paged_masked_attn(q, cache["k"], cache["v"], cache["kpos"],
                                q_pos, cfg.window)
-    return _out_proj(params, cfg, o), cache
+    return _out_proj_replicated(params, cfg, o), cache
 
 
 def ragged_attention_step(params, cfg: AttnCfg, x, cache, slot, q_pos, valid,
@@ -444,14 +458,16 @@ def ragged_attention_step(params, cfg: AttnCfg, x, cache, slot, q_pos, valid,
         jnp.where(valid, q_pos + 1, 0), mode="drop")
 
     if paged and flash_decode:
-        from repro.kernels import ops as kops
+        # TP entry point: shard_maps the Pallas kernel over the KV-head axis
+        # under the serving mesh, plain kernel call otherwise
+        from repro.serve.decode_attention import tp_ragged_paged_flash
 
         lens = jnp.where(valid, q_pos + 1, 0).astype(jnp.int32)
-        o = kops.ragged_paged_flash(q, cache["kp"], cache["vp"],
-                                    cache["ptab"], slot, lens,
-                                    ks=cache.get("ks"),
-                                    vs=cache.get("vs"))[None]
-        return _out_proj(params, cfg, o), cache
+        o = tp_ragged_paged_flash(q, cache["kp"], cache["vp"],
+                                  cache["ptab"], slot, lens,
+                                  ks=cache.get("ks"),
+                                  vs=cache.get("vs"))[None]
+        return _out_proj_replicated(params, cfg, o), cache
 
     if paged:
         k_all, v_all = _gather_paged_kv(cache, q.dtype)
@@ -468,7 +484,7 @@ def ragged_attention_step(params, cfg: AttnCfg, x, cache, slot, q_pos, valid,
     o = _paged_masked_attn(q[:, None], k_tok, v_tok, kpos_tok,
                            q_pos[:, None], cfg.window)  # (T,1,kvH,G,hd)
     o = jnp.moveaxis(o, 1, 0)  # (1,T,kvH,G,hd)
-    return _out_proj(params, cfg, o), cache
+    return _out_proj_replicated(params, cfg, o), cache
 
 
 def attention_decode(params, cfg: AttnCfg, x, cache, *, sp_decode: bool = False):

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.sharding import shard_map
+
 
 def _quant(x):
     absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
@@ -87,11 +89,10 @@ def make_ddp_value_and_grad(loss_fn, mesh, axis: str = "data"):
             loss = jax.lax.pmean(loss, axis)
             return (loss, *means, *news)
 
-        out = jax.shard_map(
+        out = shard_map(
             local, mesh=mesh,
             in_specs=(P(), P(axis)) + (P(axis),) * n,
             out_specs=(P(),) + (P(),) * n + (P(axis),) * n,
-            check_vma=False,
         )(params, batch, *treedef.flatten_up_to(ef))
         loss = out[0]
         grads = treedef.unflatten(list(out[1 : 1 + n]))

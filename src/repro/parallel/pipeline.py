@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel.sharding import shard_map
+
 
 def pipeline_apply(stage_fn: Callable, stage_params, x_microbatches, mesh: Mesh,
                    axis: str = "pipe"):
@@ -63,8 +65,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_microbatches, mesh: Mesh,
             axis)
         return outs
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(axis), P()), out_specs=P(),
-        check_vma=False,
     )(stage_params, x_microbatches)

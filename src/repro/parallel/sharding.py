@@ -19,6 +19,27 @@ from typing import Any, Dict, Optional, Sequence, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+def shard_map(f, mesh: Mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` with replication checking off.
+
+    ``jax.shard_map`` (with ``check_vma``) only exists on newer JAX; this
+    environment's 0.4.x line ships ``jax.experimental.shard_map.shard_map``
+    (with ``check_rep``).  Every call site in the repo wants the same thing
+    — per-shard execution with no replication verification — so route them
+    all through one shim instead of version-guessing at each site."""
+    top = getattr(jax, "shard_map", None)
+    if top is not None:
+        try:
+            return top(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_vma=False)
+        except TypeError:  # newer-but-different keyword surface
+            return top(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
 # ---------------------------------------------------------------------------
 # Ambient mesh + rules (thread-local so tests can nest)
 
@@ -138,6 +159,34 @@ def make_rules(mesh: Mesh, *, heads_tp: bool = False, kv_seq_axis=None,
         "act_vocab": "model",
         "act_expert": "model",
     }
+    return rules
+
+
+def make_serve_rules(mesh: Mesh) -> Dict[str, Any]:
+    """KV-head tensor-parallel rules for the ragged serving engine.
+
+    The paged KV pools (kp/vp and int8 scale pools ks/vs) split along the
+    KV-head axis over the mesh's TP axis; everything else — block tables,
+    per-slot positions, recurrent states, activations, weights — stays
+    replicated, so the engine's host-side bookkeeping (PagePool, scheduler,
+    pack vectors) is device-count-agnostic and only attention's per-head
+    work shrinks per device.  Attention outputs are constrained back to
+    replicated before the output projection, making every collective an
+    exact all-gather (token-identical to the 1-device engine)."""
+    ax = "model" if "model" in mesh.axis_names else mesh.axis_names[-1]
+    rules = make_rules(mesh, decode=True)
+    rules.update({
+        "act_kv_seq": None,  # heads, not sequence, carry the split here
+        "act_kv_heads": ax,
+        "act_kv_batch": (),  # ptab/kpos/slen replicated: global bookkeeping
+        "tensor": None,  # recurrent-state carries stay replicated
+        "act_ff": None,
+        "act_vocab": None,
+        "act_expert": None,
+        "vocab": None,
+        "expert": None,
+        "fsdp": None,  # serving params are replicated (weight-stationary)
+    })
     return rules
 
 

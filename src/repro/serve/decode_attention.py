@@ -17,6 +17,17 @@ One of the two decode-attention paths under ``serve/``:
   scalar prefetch), driven by ``serve.engine.ServeEngine``.  Use that for
   mixed-length continuous batching; use this one when the KV of a single
   sequence outgrows one device.
+
+This module also owns the tensor-parallel entry points of the paged flash
+kernels (``tp_ragged_paged_flash`` / ``tp_paged_flash_decode``): under an
+engine mesh the paged KV pools are sharded over the KV-head axis
+(serve_step.STATE_AXES "act_kv_heads"), and since GSPMD cannot partition a
+``pallas_call``, the kernels run inside an explicit ``shard_map`` over that
+axis — each shard dequantizes and attends over ONLY its head slice of the
+pools (block tables, slots, and lengths are replicated control data).
+Per-KV-head attention has no cross-shard reduction (softmax normalizes over
+the unsharded context axis), so no collective appears here; the single
+cross-head contraction lives downstream in the out-projection.
 """
 from __future__ import annotations
 
@@ -26,7 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.parallel.sharding import current_mesh, current_rules
+from repro.parallel.sharding import current_mesh, current_rules, shard_map
 
 NEG_INF = -1e30
 
@@ -73,10 +84,83 @@ def sp_flash_decode(q, k, v, k_pos, pos, window: Optional[int] = None):
         out = o / jnp.maximum(l, 1e-30)[..., None]
         return out.astype(q.dtype).reshape(q.shape)
 
-    return jax.shard_map(
+    return shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(bspec), P(bspec, seq_ax), P(bspec, seq_ax), P(seq_ax), P()),
         out_specs=P(bspec),
-        check_vma=False,
     )(q, k, v, k_pos, pos)
+
+
+# ---------------------------------------------------------------------------
+# KV-head tensor-parallel paged flash (serving engine mesh= path)
+
+
+def _head_tp(kvH: int):
+    """Resolve the active KV-head shard setup: (mesh, head_axis) when a mesh
+    is ambient, the rules map "act_kv_heads" to a mesh axis, and the axis
+    size divides ``kvH`` — else (None, None) (run the kernel unsharded)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return None, None
+    head_ax = current_rules().get("act_kv_heads")
+    if not head_ax:
+        return None, None
+    axes = (head_ax,) if isinstance(head_ax, str) else tuple(head_ax)
+    tp = 1
+    for a in axes:
+        tp *= mesh.shape[a]
+    if tp == 1 or kvH % tp != 0:
+        return None, None
+    return mesh, head_ax
+
+
+def tp_ragged_paged_flash(q, kp, vp, ptab, slot, lens, ks=None, vs=None):
+    """``kernels.ops.ragged_paged_flash`` under the engine mesh: shard_map
+    over the KV-head axis of q and the paged pools (values + int8 scales);
+    ptab/slot/lens replicate.  Falls back to the plain kernel call with no
+    mesh, no "act_kv_heads" rule, or an indivisible head count."""
+    from repro.kernels import ops as kops
+
+    mesh, h = _head_tp(q.shape[1])
+    if mesh is None:
+        return kops.ragged_paged_flash(q, kp, vp, ptab, slot, lens,
+                                       ks=ks, vs=vs)
+    qspec, pspec, sspec = P(None, h, None, None), P(None, None, h, None), \
+        P(None, None, h)
+    if ks is None:
+        return shard_map(
+            lambda q, kp, vp, ptab, slot, lens: kops.ragged_paged_flash(
+                q, kp, vp, ptab, slot, lens),
+            mesh=mesh, in_specs=(qspec, pspec, pspec, P(), P(), P()),
+            out_specs=qspec)(q, kp, vp, ptab, slot, lens)
+    return shard_map(
+        lambda q, kp, vp, ptab, slot, lens, ks, vs: kops.ragged_paged_flash(
+            q, kp, vp, ptab, slot, lens, ks=ks, vs=vs),
+        mesh=mesh,
+        in_specs=(qspec, pspec, pspec, P(), P(), P(), sspec, sspec),
+        out_specs=qspec)(q, kp, vp, ptab, slot, lens, ks, vs)
+
+
+def tp_paged_flash_decode(q, kp, vp, ptab, lens, ks=None, vs=None):
+    """``kernels.ops.paged_flash_decode`` under the engine mesh (lock-step
+    C==1 decode shape, q: (B,kvH,G,hd)); same sharding contract as
+    ``tp_ragged_paged_flash``."""
+    from repro.kernels import ops as kops
+
+    mesh, h = _head_tp(q.shape[1])
+    if mesh is None:
+        return kops.paged_flash_decode(q, kp, vp, ptab, lens, ks=ks, vs=vs)
+    qspec, pspec, sspec = P(None, h, None, None), P(None, None, h, None), \
+        P(None, None, h)
+    if ks is None:
+        return shard_map(
+            lambda q, kp, vp, ptab, lens: kops.paged_flash_decode(
+                q, kp, vp, ptab, lens),
+            mesh=mesh, in_specs=(qspec, pspec, pspec, P(), P()),
+            out_specs=qspec)(q, kp, vp, ptab, lens)
+    return shard_map(
+        lambda q, kp, vp, ptab, lens, ks, vs: kops.paged_flash_decode(
+            q, kp, vp, ptab, lens, ks=ks, vs=vs),
+        mesh=mesh, in_specs=(qspec, pspec, pspec, P(), P(), sspec, sspec),
+        out_specs=qspec)(q, kp, vp, ptab, lens, ks, vs)

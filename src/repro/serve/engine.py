@@ -55,9 +55,22 @@ policy applies there too; pack ordering is a ragged-path concept).
 ``benchmarks/serve_sweep.py`` carries the engine and scheduler A/Bs;
 ``core.autotune.select_serve_defaults`` emits the tuned-once serving config
 (token_budget × prefill_chunk × page_size × kv_dtype × scheduler).
+
+**Tensor parallelism (``mesh=``)**: the single compiled ragged step shards
+over the KV-head axis.  Pool layout: ``kp``/``vp`` pages and their int8
+scale pools ``ks``/``vs`` split along their KV-head dim (device d holds
+heads ``[d·kvH/N, (d+1)·kvH/N)`` of every page); block tables, positions,
+and fill counts replicate.  The contract is strict layering: the HOST
+bookkeeping (PagePool / Scheduler / slot state / byte budget) is global and
+never sees the device count, while the DEVICE programs run under the serve
+mesh rules and keep outputs bit-identical across device counts (the
+attention output is replicated before the one head-contracting einsum, so
+no device-count-dependent partial-sum order exists).  ``stats`` reports
+``kv_shards`` / ``n_devices`` / ``kv_pool_bytes_per_device``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -66,6 +79,7 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelCfg
 from repro.models import model as M
@@ -101,9 +115,34 @@ class ServeEngine:
                  token_budget: int = 128, greedy: bool = True,
                  ragged: bool = True, flash_decode: bool = False,
                  prefix_cache: bool = True, kv_dtype: Optional[str] = None,
-                 scheduler=None):
+                 scheduler=None, mesh=None):
         self.params = params
         self.cfg = cfg
+        # KV-head tensor parallelism (``mesh=`` — a jax.sharding.Mesh, e.g.
+        # launch.mesh.make_mesh((N,), ("model",))).  The DEVICE side splits:
+        # the paged KV pools (kp/vp and int8 ks/vs) shard along the KV-head
+        # axis (serve_step.STATE_AXES), every compiled program runs under
+        # ``use_mesh(mesh, make_serve_rules(mesh))``, and the Pallas flash
+        # kernels enter through the shard_map wrappers in
+        # serve.decode_attention — each device holds and attends over
+        # 1/N of each pool page's heads.  The HOST side does NOT split:
+        # PagePool, Scheduler, slot bookkeeping, and the page budget are
+        # global and device-count-agnostic — page ids name whole logical
+        # pages whose bytes happen to live N-ways split, so admission,
+        # eviction, prefix sharing, and COW decisions are identical at any
+        # device count (the invariance suite asserts token-identical output
+        # across 1/2/4 devices).  Layers whose KV-head count the mesh does
+        # not divide keep replicated pools (sanitize_spec drops the axis).
+        self.mesh = mesh
+        self._kv_shards = 1
+        self._rules = None
+        if mesh is not None:
+            from repro.parallel.sharding import make_serve_rules
+
+            self._rules = make_serve_rules(mesh)
+            ax = self._rules["act_kv_heads"]
+            for a in ((ax,) if isinstance(ax, str) else tuple(ax)):
+                self._kv_shards *= mesh.shape[a]
         self.B = batch_size
         self.cache_len = cache_len
         self.page_size = page_size
@@ -157,6 +196,11 @@ class ServeEngine:
         # (e.g. a float32 pool on a bfloat16 model) keeps every slot
         # admissible without queueing, at the cost of exceeding the
         # activation-dtype byte budget (visible in stats["kv_pool_bytes"])
+        # the budget is priced on GLOBAL (unsharded) page bytes on purpose:
+        # a sharded pool's per-device bytes shrink by the shard count, but
+        # pricing pages per-device would let n_pages drift with the device
+        # count and break the cross-device-count token-identity contract —
+        # per-device footprint is reported in stats instead
         base_pages = batch_size * self.pps
         if max_pages is not None:
             self.n_pages = max_pages
@@ -188,7 +232,17 @@ class ServeEngine:
                        "kv_bytes_per_token": kv_bytes_per_token(
                            cfg, self.kv_dtype),
                        "kv_pool_bytes": self.n_pages * kv_page_bytes(
-                           cfg, page_size, self.kv_dtype)}
+                           cfg, page_size, self.kv_dtype),
+                       # tensor-parallel accounting: shard count of the
+                       # paged pools' KV-head axis and one device's share
+                       # of the pool bytes (== kv_pool_bytes at 1 device)
+                       "kv_shards": self._kv_shards,
+                       "n_devices": (mesh.devices.size
+                                     if mesh is not None else 1),
+                       "kv_pool_bytes_per_device":
+                           self.n_pages * kv_page_bytes(
+                               cfg, page_size, self.kv_dtype,
+                               self._kv_shards)}
         # per-token / per-tick logs for the latency benchmark:
         # token_log rows are (uid, tick index, wall time); tick_log rows are
         # (had outstanding prefill at tick start, wall time at tick end)
@@ -664,15 +718,49 @@ class ServeEngine:
         """No live slot and nothing queued."""
         return all(s is None for s in self.slots) and not self.queue
 
+    def _ctx(self):
+        """Ambient mesh + serve rules for every trace/execute of the
+        compiled programs (no-op without ``mesh=``).  All four device
+        programs — the serve step, COW copy, slot reset, and the two-phase
+        legacy steps — must trace under the SAME context so the lshard
+        constraints in the model and the shard_map kernel wrappers see the
+        KV-head rule; the sharded state then keeps every program's layout
+        consistent via input propagation."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro.parallel.sharding import use_mesh
+
+        return use_mesh(self.mesh, self._rules)
+
     def _ensure_state(self):
         """Decode state is created once and persists for the engine's whole
         life: freeing it between runs would throw away the prefix cache (the
-        pool's pages ARE the cached data)."""
+        pool's pages ARE the cached data).
+
+        Under ``mesh=`` the freshly built state is committed to its
+        NamedShardings (serve_step.decode_state_specs: pools split on the
+        KV-head axis, per-slot bookkeeping replicated) and the params are
+        committed replicated; every jit'd program then inherits the layout
+        from its committed operands — no per-call in_shardings needed, and
+        donation keeps the sharded pools updating in place."""
         if self._state is None:
             self._state = M.init_paged_state(
                 self.params, self.cfg, self.B, self.cache_len,
                 page_size=self.page_size, n_pages=self.n_pages,
                 window_extra=self.chunk, kv_dtype=self.kv_dtype)
+            if self.mesh is not None:
+                from repro.serve.serve_step import decode_state_specs
+
+                with self._ctx():
+                    specs = decode_state_specs(jax.tree.map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                        self._state))
+                ns = jax.tree.map(
+                    lambda s: NamedSharding(self.mesh, s), specs,
+                    is_leaf=lambda x: isinstance(x, P))
+                self._state = jax.device_put(self._state, ns)
+                self.params = jax.device_put(
+                    self.params, NamedSharding(self.mesh, P()))
             # the reset template must not alias the (donated) live state
             self._template = jax.tree.map(jax.numpy.copy, self._state)
 
@@ -682,17 +770,18 @@ class ServeEngine:
         Public so continuous-arrival drivers (benchmarks/serve_sweep.py) and
         ``RequestHandle.tokens()`` iterators can interleave ``submit`` with
         serving instead of draining a batch."""
-        self._ensure_state()
-        self._state = self._admit(self._state)
-        had_prefill = any(s is not None and s.fill < len(s.req.prompt)
-                          for s in self.slots)
-        results: Dict[int, List[int]] = {}
-        if self.ragged:
-            self._state, results = self._ragged_tick(self._state)
-        elif had_prefill:
-            self._state = self._prefill_tick(self._state)
-        elif any(s is not None for s in self.slots):
-            self._state, results = self._decode_tick(self._state)
+        with self._ctx():
+            self._ensure_state()
+            self._state = self._admit(self._state)
+            had_prefill = any(s is not None and s.fill < len(s.req.prompt)
+                              for s in self.slots)
+            results: Dict[int, List[int]] = {}
+            if self.ragged:
+                self._state, results = self._ragged_tick(self._state)
+            elif had_prefill:
+                self._state = self._prefill_tick(self._state)
+            elif any(s is not None for s in self.slots):
+                self._state, results = self._decode_tick(self._state)
         self._stats["ticks"] += 1
         self.tick_log.append((had_prefill, time.perf_counter()))
         return results

@@ -49,13 +49,20 @@ import numpy as np
 from repro.core.roofline import KV_ITEMSIZE, KV_SCALE_BYTES
 
 
-def kv_page_bytes(cfg, page_size: int, kv_dtype: str) -> int:
+def kv_page_bytes(cfg, page_size: int, kv_dtype: str,
+                  kv_shards: int = 1) -> int:
     """Bytes one pool page costs across ALL paged (global-attention) layers
     for a given storage dtype — K and V values plus, for int8, their scale
     rows.  The engine sizes its page budget with this: a pool budget is a
     BYTE budget, and int8 fits ~``4·hd/(hd+4)``× the pages of float32 in
     the same bytes (≈3.8× at hd=64, ≥2× for hd ≥ 4; 3.2× on the smoke
-    model's hd=16)."""
+    model's hd=16).
+
+    ``kv_shards`` prices a page PER DEVICE under KV-head tensor parallelism
+    (serve.engine ``mesh=``): each device holds ``kvH // kv_shards`` of a
+    layer's KV heads, so a page's per-device footprint shrinks by the shard
+    count (layers whose head count does not divide stay replicated and cost
+    their full bytes on every device)."""
     isize = KV_ITEMSIZE[kv_dtype]
     sbytes = KV_SCALE_BYTES[kv_dtype]
     total = 0
@@ -63,16 +70,19 @@ def kv_page_bytes(cfg, page_size: int, kv_dtype: str) -> int:
         for blk in st.pattern:
             if blk.mixer == "attn" and blk.attn.window is None:
                 kvH, hd = blk.attn.num_kv_heads, blk.attn.head_dim
+                if kvH % kv_shards == 0:
+                    kvH //= kv_shards
                 total += st.repeats * 2 * page_size * kvH * (hd * isize
                                                              + sbytes)
     return total
 
 
-def kv_bytes_per_token(cfg, kv_dtype: str) -> int:
+def kv_bytes_per_token(cfg, kv_dtype: str, kv_shards: int = 1) -> int:
     """Bytes of paged-pool KV one token occupies (and one decode step must
     stream per context token) across all global-attention layers — the
-    quantity the int8 pool halves-or-better vs float32."""
-    return kv_page_bytes(cfg, 1, kv_dtype)
+    quantity the int8 pool halves-or-better vs float32.  Per device when
+    ``kv_shards > 1`` (see ``kv_page_bytes``)."""
+    return kv_page_bytes(cfg, 1, kv_dtype, kv_shards)
 
 
 class _PrefixNode:

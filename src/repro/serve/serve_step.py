@@ -28,6 +28,16 @@ page pools, ptab block tables, kpos per-slot positions, slen fill counts) —
 so ``decode_state_specs`` can lay either state out on a mesh.  The ragged
 pack's own vectors (tokens/slot/q_pos/seq_idx/valid) are replicated: they
 are (T,)-sized control data, not state.
+
+Under the serving engine's ``mesh=`` (rules from ``parallel.sharding
+.make_serve_rules``) exactly one logical axis maps to hardware:
+"act_kv_heads" — so the page pools and int8 scale pools split along their
+KV-head dim while ptab/kpos/slen and the pack vectors replicate.  That
+shard-split pool layout is the whole device-side story of serving TP: a
+logical page id (what PagePool allocates, refcounts, and evicts) names the
+SAME page on every device, each device merely storing its slice of the
+page's heads — which is why the host bookkeeping needs no knowledge of the
+device count and one traced program serves any mesh size.
 """
 from __future__ import annotations
 

@@ -16,9 +16,20 @@ def run_multidevice(code: str, n_devices: int = 8, timeout: int = 600) -> str:
     Multi-device tests must not set xla_force_host_platform_device_count in
     this process (smoke tests and benches must see 1 device), so each
     sharded test runs in its own interpreter.
+
+    The child env is pinned, not inherited: every ``XLA_*`` / ``JAX_*`` /
+    ``LIBTPU*`` / ``TPU_*`` variable from the invoking shell is scrubbed
+    before setting an explicit ``XLA_FLAGS``.  An inherited
+    ``XLA_FLAGS`` would silently *replace* our device-count flag (the
+    assignment below clobbers it) or, worse, an inherited
+    ``JAX_PLATFORMS``/``JAX_NUM_CPU_DEVICES`` would change the child's
+    device topology and make these tests CPU-environment sensitive —
+    exactly the seed-era flakiness this scrub retires.
     """
-    env = dict(os.environ)
+    env = {k: v for k, v in os.environ.items()
+           if not k.startswith(("XLA_", "JAX_", "LIBTPU", "TPU_"))}
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["JAX_PLATFORMS"] = "cpu"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     proc = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],

@@ -3,7 +3,6 @@ full-size lowering needs fake devices)."""
 import pytest
 
 
-@pytest.mark.xfail(strict=False, reason="seed-era: autotune ranking is CPU-environment sensitive")
 def test_autotune_ranks_candidates(multidevice):
     multidevice("""
 import os

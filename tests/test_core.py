@@ -126,7 +126,6 @@ def test_score_identifies_dominant_term():
 # HLO cost walker
 
 
-@pytest.mark.xfail(strict=False, reason="seed-era: the HLO walker under-counts while-loop trip counts")
 def test_walker_counts_loop_trips():
     def f(x):
         def body(c, _):
@@ -139,7 +138,6 @@ def test_walker_counts_loop_trips():
     assert r["flops"] == pytest.approx(11 * 2 * 4 * 32 * 32, rel=0.01)
 
 
-@pytest.mark.xfail(strict=False, reason="seed-era: the HLO walker under-counts while-loop trip counts")
 def test_walker_nested_scans():
     def g(x):
         def outer(c, _):

@@ -1,6 +1,9 @@
 """Sharded-execution tests (each in a subprocess with fake devices, so the
-main pytest process keeps a single device — see conftest.run_multidevice)."""
-import pytest
+main pytest process keeps a single device — see conftest.run_multidevice).
+
+The subprocess env is scrubbed of inherited ``XLA_*``/``JAX_*`` knobs and
+pinned to an explicit ``--xla_force_host_platform_device_count`` so these
+tests are insensitive to the invoking shell's accelerator config."""
 
 
 def test_sharded_train_step_matches_single_device(multidevice):
@@ -48,7 +51,6 @@ print("OK")
 """)
 
 
-@pytest.mark.xfail(strict=False, reason="seed-era: CPU-environment sensitive multidevice path")
 def test_sp_flash_decode_matches_local(multidevice):
     multidevice("""
 import jax, jax.numpy as jnp, numpy as np
@@ -83,7 +85,6 @@ print("OK")
 """)
 
 
-@pytest.mark.xfail(strict=False, reason="seed-era: CPU-environment sensitive multidevice path")
 def test_pipeline_parallel_matches_sequential(multidevice):
     multidevice("""
 import jax, jax.numpy as jnp, numpy as np
@@ -107,7 +108,6 @@ print("OK")
 """)
 
 
-@pytest.mark.xfail(strict=False, reason="seed-era: CPU-environment sensitive multidevice path")
 def test_compressed_ddp_converges(multidevice):
     multidevice("""
 import jax, jax.numpy as jnp, numpy as np

@@ -475,23 +475,8 @@ def test_cancel_with_shared_prefix_pages_keeps_siblings_exact(qwen):
     assert eng.reclaimable_pages == eng.n_pages
 
 
-@settings(max_examples=5, deadline=None)
-@given(ops=st.lists(st.tuples(st.sampled_from(["submit", "tick", "cancel"]),
-                              st.integers(0, 7)),
-                    min_size=3, max_size=14))
-def test_cancel_interleavings_never_leak_pages(qwen, ops):
-    """Property (the acceptance gate): ANY interleaving of submit / tick /
-    cancel — cancels hitting queued, prefilling, decoding, finished, and
-    prefix-sharing requests alike — drains to a fully reclaimable pool with
-    every refcount at zero."""
-    cfg, params = qwen
-    if not hasattr(test_cancel_interleavings_never_leak_pages, "_eng"):
-        # one engine (and prefix cache) across examples: later examples
-        # start from whatever cache state earlier ones left — more
-        # adversarial than a fresh pool, and an order of magnitude faster
-        test_cancel_interleavings_never_leak_pages._eng = _engine(
-            params, cfg, max_pages=12)
-    eng = test_cancel_interleavings_never_leak_pages._eng
+def _drive_interleaving(eng, cfg, ops):
+    """Shared property body: drive one op interleaving, assert full drain."""
     [shared] = _prompts(cfg, [16], seed=105)
     handles = []
     rng = np.random.RandomState(sum(i for _, i in ops))
@@ -509,6 +494,46 @@ def test_cancel_interleavings_never_leak_pages(qwen, ops):
     assert all(h.done for h in handles)
     assert (eng._ref == 0).all()
     assert eng.reclaimable_pages == eng.n_pages
+
+
+@settings(max_examples=5, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["submit", "tick", "cancel"]),
+                              st.integers(0, 7)),
+                    min_size=3, max_size=14))
+def test_cancel_interleavings_never_leak_pages(qwen, ops):
+    """Property (the acceptance gate): ANY interleaving of submit / tick /
+    cancel — cancels hitting queued, prefilling, decoding, finished, and
+    prefix-sharing requests alike — drains to a fully reclaimable pool with
+    every refcount at zero."""
+    cfg, params = qwen
+    if not hasattr(test_cancel_interleavings_never_leak_pages, "_eng"):
+        # one engine (and prefix cache) across examples: later examples
+        # start from whatever cache state earlier ones left — more
+        # adversarial than a fresh pool, and an order of magnitude faster
+        test_cancel_interleavings_never_leak_pages._eng = _engine(
+            params, cfg, max_pages=12)
+    _drive_interleaving(test_cancel_interleavings_never_leak_pages._eng,
+                        cfg, ops)
+
+
+@settings(max_examples=5, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["submit", "tick", "cancel"]),
+                              st.integers(0, 7)),
+                    min_size=3, max_size=14))
+def test_cancel_interleavings_never_leak_pages_meshed(qwen, ops):
+    """The same no-leak property through a MESHED engine (1-device mesh —
+    the parent process has one device; 2/4-device interleavings run in
+    tests/test_serve_tp.py subprocesses): host-side page accounting must be
+    device-count-agnostic, so putting the compiled programs under a mesh
+    and sharded-state placement must not perturb any refcount path."""
+    from repro.launch.mesh import make_mesh
+
+    cfg, params = qwen
+    fn = test_cancel_interleavings_never_leak_pages_meshed
+    if not hasattr(fn, "_eng"):
+        fn._eng = _engine(params, cfg, max_pages=12,
+                          mesh=make_mesh((1,), ("model",)))
+    _drive_interleaving(fn._eng, cfg, ops)
 
 
 # ---------------------------------------------------------------------------
