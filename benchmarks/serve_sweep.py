@@ -25,6 +25,14 @@ analogue sweeps (concurrent users × prompt-length mix × page size) through
   re-prefilling it.  Reports tokens/s sharing-on vs sharing-off plus
   ``prefix_hit_rate`` / ``tokens_reused``, and checks greedy outputs stay
   token-identical to the seed reference engine.
+- **tiered KV cache A/B (drop-on-evict vs host-tier)** — the paper's
+  cache-mode experiment applied to the page pool itself: a prefix working
+  set larger than the device pool is replayed warm; the untiered arm
+  re-prefills every evicted prefix, the tiered arm promotes demoted pages
+  back from the host tier.  Reports replay tokens/s per arm, the
+  device/host/miss admission split, pages promoted, and the token-identity
+  check (tiering moves bytes, never changes them).  ``--tiered-only`` runs
+  just this scenario (the CI tiered-smoke job).
 - **fp32-vs-int8 KV pool A/B at a fixed page-pool BYTE budget** — the
   quantized-working-set experiment: both arms get the same pool bytes, so
   the int8 arm holds 2-4× the resident pages and admits more concurrent
@@ -351,6 +359,116 @@ def scheduler_ab_scenario(cfg, params, *, cache_len: int = 256,
             "token_identical": bool(identical)}
 
 
+def tiered_kv_scenario(cfg, params, *, page_size: int = 8,
+                       n_families: int = 3, prefix_pages: int = 6,
+                       max_tokens: int = 4, seed: int = 29,
+                       warm: bool = True):
+    """Tiered KV cache A/B — the paper's cache-vs-flat experiment at
+    serving time.
+
+    Traffic: ``n_families`` prompts of ``prefix_pages`` full pages each —
+    a prefix working set deliberately LARGER than the device pool — driven
+    twice through each arm (cold populate, then the measured warm replay).
+    The drop-on-evict arm (``host_pages=0``) loses every prefix to
+    allocation pressure before its replay arrives and re-prefills from
+    scratch; the tiered arm (``host_pages``>0) demoted those pages to host
+    RAM, so every replay is a HOST hit promoted back — only the decode
+    ticks remain.
+
+    Reports per arm: replay tokens/s, the admission hit split
+    (device / host / miss), pages promoted, tier traffic counters; plus
+    ``speedup`` (tiered over drop-on-evict replay tokens/s),
+    ``host_hit_rate`` on the tiered replay, and ``token_identical`` across
+    arms AND waves (tiering moves bytes, never changes them)."""
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(0, cfg.vocab_size, prefix_pages * page_size)
+               for _ in range(n_families)]
+    footprint = prefix_pages + -(-max_tokens // page_size)
+    # device pool: ONE request's footprint — far below the n_families *
+    # prefix_pages working set, so every admission evicts (or demotes) the
+    # previous family's whole prefix and an untiered replay always misses
+    max_pages = footprint
+    cache_len = (prefix_pages + 1) * page_size
+
+    out = {}
+    outputs = {}
+    for mode, host in (("drop-on-evict", 0),
+                       ("host-tier", 2 * n_families * prefix_pages)):
+        eng = ServeEngine(params, cfg, batch_size=1, cache_len=cache_len,
+                          page_size=page_size, prefill_chunk=page_size,
+                          token_budget=32, max_pages=max_pages,
+                          host_pages=host)
+
+        def drive():
+            uids = [eng.submit(p, max_tokens=max_tokens) for p in prompts]
+            t0 = time.perf_counter()
+            results = eng.run()
+            dt = time.perf_counter() - t0
+            n_tok = sum(len(results[u]) for u in uids)
+            assert all(len(results[u]) == max_tokens for u in uids)
+            return n_tok / dt, [results[u] for u in uids]
+
+        if warm:  # compile every program (movers included), then forget
+            drive()
+            drive()
+            eng.drop_prefix_cache()
+        _, cold_out = drive()  # populate: cold prefill, pressure demotes
+        before = dict(eng.stats)
+        tps, replay_out = drive()  # measured warm replay
+        adm = eng.stats["admissions"] - before["admissions"]
+        hits = eng.stats["prefix_hits"] - before["prefix_hits"]
+        host_hits = eng.stats["host_hits"] - before["host_hits"]
+        outputs[mode] = cold_out + replay_out
+        delta = {k: eng.stats[k] - before[k]
+                 for k in ("host_pages_promoted", "demotions",
+                           "host_evictions", "evictions", "ticks")}
+        # replay is a steady state (each wave re-demotes what it promoted,
+        # or re-prefills what it dropped): best-of-3 damps wall-clock noise
+        for _ in range(2):
+            t2, r2 = drive()
+            assert r2 == replay_out
+            tps = max(tps, t2)
+        out[mode] = {
+            "tokens_per_s": tps,
+            "host_pool_pages": host,
+            "replay_admissions": adm,
+            "hit_split": {"device": hits - host_hits, "host": host_hits,
+                          "miss": adm - hits},
+            "host_hit_rate": host_hits / max(adm, 1),
+            "pages_promoted": delta["host_pages_promoted"],
+            "demotions": delta["demotions"],
+            "host_evictions": delta["host_evictions"],
+            "evictions": delta["evictions"],
+            "ticks": delta["ticks"],
+            "traces": eng.stats["traces"],
+        }
+    identical = (outputs["host-tier"] == outputs["drop-on-evict"]
+                 and outputs["host-tier"][:n_families]
+                 == outputs["host-tier"][n_families:])
+    return {**out,
+            "speedup": (out["host-tier"]["tokens_per_s"]
+                        / out["drop-on-evict"]["tokens_per_s"]),
+            "host_hit_rate": out["host-tier"]["host_hit_rate"],
+            "token_identical": bool(identical)}
+
+
+def _tiered_rows(arch, tiered):
+    rows = []
+    for mode in ("drop-on-evict", "host-tier"):
+        r = tiered[mode]
+        split = r["hit_split"]
+        rows.append((f"serve/{arch}/tiered/{mode}", r["tokens_per_s"],
+                     f"host_pool_pages={r['host_pool_pages']},"
+                     f"hit_split=d{split['device']}/h{split['host']}"
+                     f"/m{split['miss']},promoted={r['pages_promoted']}"))
+    rows.append((f"serve/{arch}/tiered/speedup", tiered["speedup"],
+                 f"x-over-drop-on-evict,"
+                 f"host_hit_rate={tiered['host_hit_rate']:.2f},"
+                 "token_identical="
+                 + str(tiered["token_identical"]).lower()))
+    return rows
+
+
 def kv_ab_scenario(cfg, params, *, cache_len: int = 64, batch_size: int = 8,
                    page_size: int = 8, seed: int = 17, warm: bool = True):
     """fp32-vs-int8 paged-pool A/B at a FIXED page-pool byte budget.
@@ -644,6 +762,8 @@ def sweep(arch: str, users, page_sizes, max_tokens: int, cache_len: int,
     rows.append((f"serve/{arch}/scheduler/slo-p50-ratio",
                  sched_ab["slo_p50_latency_ratio"],
                  "x-fifo-p50-interactive-latency"))
+    tiered = tiered_kv_scenario(cfg, params, warm=warm)
+    rows += _tiered_rows(arch, tiered)
     kv_ab = kv_ab_scenario(cfg, params, warm=warm)
     for p in kv_ab["points"]:
         for arm in ("fp32", "int8"):
@@ -658,7 +778,7 @@ def sweep(arch: str, users, page_sizes, max_tokens: int, cache_len: int,
             f"/max_tokens={p['max_tokens']}", p["speedup"],
             f"x-int8-over-fp32-at-equal-bytes,"
             f"top1_agreement={p['top1_agreement']:.3f}"))
-    return rows, lat, pre, kv_ab, sched_ab
+    return rows, lat, pre, kv_ab, sched_ab, tiered
 
 
 def main(argv=None):
@@ -679,6 +799,9 @@ def main(argv=None):
     ap.add_argument("--sharded-only", action="store_true",
                     help="skip the single-device sweep; run only the "
                          "sharded scenario (implies --sharded)")
+    ap.add_argument("--tiered-only", action="store_true",
+                    help="skip the main sweep; run only the tiered KV "
+                         "cache A/B (drop-on-evict vs host-tier replay)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + latency results as JSON")
     args = ap.parse_args(argv)
@@ -686,9 +809,15 @@ def main(argv=None):
         args.users, args.page_sizes, args.max_tokens = [4], [8], 4
     if args.sharded_only:
         args.sharded = True
-    rows, lat, pre, kv_ab, sched_ab = ([], None, None, None, None)
-    if not args.sharded_only:
-        rows, lat, pre, kv_ab, sched_ab = sweep(
+    rows, lat, pre, kv_ab, sched_ab, tiered = (
+        [], None, None, None, None, None)
+    if args.tiered_only:
+        cfg = get_config(args.arch, smoke=True)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        tiered = tiered_kv_scenario(cfg, params, warm=not args.cold)
+        rows = _tiered_rows(args.arch, tiered)
+    elif not args.sharded_only:
+        rows, lat, pre, kv_ab, sched_ab, tiered = sweep(
             args.arch, args.users, args.page_sizes, args.max_tokens,
             args.cache_len, baseline=not args.no_baseline, warm=not args.cold)
     sharded = None
@@ -723,8 +852,11 @@ def main(argv=None):
             "prefix_scenario": pre,
             "kv_dtype_ab": kv_ab,
             "scheduler_ab": sched_ab,
+            "tiered_kv": tiered,
+            # host_pool_pages axis included: the tuner prices the tiered
+            # point's promotion traffic against untiered re-prefill
             "tuned_serving_config": select_serve_defaults(
-                args.arch, smoke=True)["best"],
+                args.arch, smoke=True, host_pool_pages=(0, 64))["best"],
         }
         if sharded is not None:
             payload["sharded_serve"] = sharded

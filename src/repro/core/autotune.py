@@ -103,6 +103,10 @@ SCHEDULER_MODEL = {
     "fifo": {"residency": 0.5, "interactive_wait": 1.0},
     "prefix-aware": {"residency": 1.0, "interactive_wait": 1.0},
     "slo": {"residency": 0.5, "interactive_wait": 0.0},
+    # the composite (SLO class first, family grouping within a class) keeps
+    # prefix-aware's residency AND slo's interactive jump — it gives up
+    # neither criterion, which under max-min is exactly what wins the axis
+    "class-then-family": {"residency": 1.0, "interactive_wait": 0.0},
 }
 
 
@@ -112,8 +116,10 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
                           prefill_chunks=(16, 32, 64),
                           page_sizes=(8, 16, 32),
                           kv_dtypes=("float32", "bfloat16", "int8"),
-                          schedulers=("fifo", "prefix-aware", "slo"),
+                          schedulers=("fifo", "prefix-aware", "slo",
+                                      "class-then-family"),
                           device_counts=(1,),
+                          host_pool_pages=(0,),
                           shared_frac: float = 0.75, gen_tokens: int = 32,
                           hw: HwSpec = V5E, smoke: bool = False) -> Dict:
     """Emit ONE tuned serving config for ``serve.ServeEngine``.
@@ -163,6 +169,20 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
     stops paying (once the per-device bound goes param-dominated).  The
     default ``(1,)`` keeps the single-device grid (and table size)
     unchanged; rows and ``best`` carry ``n_devices`` either way.
+
+    ``host_pool_pages`` adds the TIERED-CACHE axis (ServeEngine
+    ``host_pages=``).  When a nonzero size is on the axis, every candidate
+    is additionally scored on ``spill@replay``: warm-replay traffic whose
+    prefix working set exceeds the device pool (the tiered bench scenario).
+    Untiered (0), a spilled prefix re-prefills — the slot is occupied for
+    ``ceil(S / chunk)`` prefill ticks (per-slot chunk rate, capped by the
+    leftover budget split across the replaying slots — the engine's pack
+    bound) before its ``G`` decode ticks; tiered, it PROMOTES —
+    ``S/page_size`` pages of host→device traffic priced by
+    ``mixed_bound(promoted_pages=...)`` against ``hw.h2d_bw``, overlapped
+    with decode, so the request costs only its ``G`` decode ticks at the
+    (possibly promotion-roofed) tick time.  The default ``(0,)`` skips the
+    criterion entirely: the existing selection is bit-identical.
     """
     from repro.configs import get_config
     from repro.core.roofline import mixed_bound
@@ -211,10 +231,40 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
                             # p50 decode latency under concurrent prefill
                             # (the PR 2 metric)
                             tps["decode_rate@blend"] = 1.0 / blend_tick_s
-                    for sched in schedulers:
+                    # tiered-cache axis: replay throughput when the prefix
+                    # working set spills past the device pool.  Scheduler-
+                    # independent, so computed once per (knobs, host size).
+                    S = max(int(context_len * shared_frac), 1)
+                    G = max(gen_tokens, 1)
+                    tier_on = any(h > 0 for h in host_pool_pages)
+                    spill = {}
+                    for h in host_pool_pages:
+                        if not tier_on:
+                            continue
+                        dec = min(batch_size, tb)
+                        if h > 0:
+                            # each replayed request promotes its S/ps spilled
+                            # pages once over its G decode ticks, overlapped
+                            rp = mixed_bound(
+                                cfg, n_decode=dec, n_prefill=0,
+                                context_len=context_len, hw=hw, page_size=ps,
+                                kv_dtype=kvd, n_devices=ndev,
+                                promoted_pages=dec * max(S // ps, 1) / G)
+                            spill[h] = dec / (G * max(rp["tick_s"], 1e-30))
+                        else:
+                            # both tiers miss: before its G decode ticks the
+                            # slot re-prefills its spilled prefix at the
+                            # per-slot chunk rate (the leftover budget split
+                            # across the replaying slots caps the chunk —
+                            # exactly the engine's pack bound)
+                            chunk_eff = max(
+                                min(pc, max(tb - dec, 0) // max(dec, 1)), 1)
+                            prefill_ticks = -(-S // chunk_eff)
+                            spill[h] = dec / ((prefill_ticks + G)
+                                              * blend_tick_s)
+                    for sched, h in ((s, h) for s in schedulers
+                                     for h in host_pool_pages):
                         model = SCHEDULER_MODEL[sched]
-                        S = max(int(context_len * shared_frac), 1)
-                        G = max(gen_tokens, 1)
                         hit = shared_frac * model["residency"]
                         # pack tokens a warm-family request still costs vs
                         # the full cold S+G — the scheduler's reuse leverage
@@ -229,9 +279,12 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
                         crit["interactive@arrival"] = 1.0 / (
                             blend_tick_s
                             * (1 + model["interactive_wait"] * prefill_ticks))
+                        if tier_on:
+                            crit["spill@replay"] = spill[h]
                         rows.append({"token_budget": tb, "prefill_chunk": pc,
                                      "page_size": ps, "kv_dtype": kvd,
                                      "scheduler": sched, "n_devices": ndev,
+                                     "host_pool_pages": h,
                                      "criteria": crit})
     if not rows:
         raise ValueError("no valid (token_budget, prefill_chunk, page_size, "
@@ -247,6 +300,7 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
     best = max(rows, key=lambda r: (r["score"], r["mean_fraction"]))
     return {"best": {k: best[k] for k in ("token_budget", "prefill_chunk",
                                           "page_size", "kv_dtype",
-                                          "scheduler", "n_devices", "score",
+                                          "scheduler", "n_devices",
+                                          "host_pool_pages", "score",
                                           "mean_fraction")},
             "table": rows}

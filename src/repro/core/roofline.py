@@ -21,6 +21,10 @@ class HwSpec:
     peak_flops: float = 197e12  # bf16 FLOP/s per chip
     hbm_bw: float = 819e9  # bytes/s per chip
     ici_bw: float = 50e9  # bytes/s per ICI link
+    # host->device promotion bandwidth (PCIe-class): the governing term of
+    # the tiered KV cache, exactly as the Xeon Phi studies measured the
+    # DDR->MCDRAM path to be the governing term of cache mode
+    h2d_bw: float = 32e9  # bytes/s per chip
 
 
 V5E = HwSpec()
@@ -176,7 +180,8 @@ def decode_bound(cfg, batch: int, context_len: int, hw: HwSpec = V5E,
 
 def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
                 hw: HwSpec = V5E, page_size: int = None,
-                kv_dtype=None, n_devices: int = 1) -> Dict:
+                kv_dtype=None, n_devices: int = 1,
+                promoted_pages: float = 0.0) -> Dict:
     """Analytic bound for ONE ragged tick — the decode/prefill roofline blend.
 
     Scores a pack of ``n_decode`` decode tokens + ``n_prefill`` prefill-chunk
@@ -205,6 +210,18 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
     ``decode_bound``: paged-layer attention FLOPs and KV read/write bytes
     divide by N (when the layer's KV-head count divides), the replicated
     parameter sweep does not.
+
+    ``promoted_pages`` prices the TIERED KV cache's host→device traffic:
+    the average pool pages per tick promoted from the host tier on prefix
+    hits (``ServeEngine(host_pages=...)``).  Promotion bytes cross the
+    ``hw.h2d_bw`` link — the governing term of the paper's cache mode —
+    but the copy is issued at admission and OVERLAPPED with the tick's
+    compute, so the tick time is ``max(compute, memory, promotion)``, not
+    a sum: tiering is free until H2D traffic becomes the binding roof
+    (reported as ``promotion_s`` / ``promoted_bytes``).  The alternative
+    the term is priced against is re-prefilling the same tokens, which
+    pays compute AND pool writes — a host hit wins whenever
+    ``promotion_s`` is below the re-prefill tick it replaces.
     """
     n_act = active_param_count(cfg)
     param_bytes = n_act * (2 if cfg.param_dtype == "bfloat16" else 4)
@@ -243,16 +260,39 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
         return t_comp, t_mem, max(t_comp, t_mem, 1e-30), kv_read, kv_write
 
     t_comp, t_mem, t, kv_read, kv_write = _tick(n_decode, n_prefill)
+    # promotion term: pages/tick crossing the host->device link, overlapped
+    # with the tick's compute (issued at admission) — a third roof, not an
+    # added cost
+    promo_bytes = 0.0
+    if promoted_pages:
+        ps = page_size or 1
+        for st in cfg.stages:
+            for blk in st.pattern:
+                if (blk.mixer not in ("attn", "cross_attn")
+                        or blk.attn is None or blk.attn.window is not None):
+                    continue
+                a = blk.attn
+                eb = _kv_elem_bytes(kv_dtype, a.head_dim, act_bytes)
+                shards = n_devices if a.num_kv_heads % n_devices == 0 else 1
+                promo_bytes += (st.repeats * 2.0 * ps * a.num_kv_heads
+                                * a.head_dim * eb / shards)
+        promo_bytes *= promoted_pages
+    t_promo = promo_bytes / hw.h2d_bw
+    t = max(t, t_promo, 1e-30)
     # two-phase floor: the same tokens as a decode-only tick plus a
     # prefill-only tick, each paying its own parameter sweep
     t_dec = _tick(n_decode, 0)[2]
     t_pre = _tick(0, n_prefill)[2]
     two_phase = ((t_dec if n_decode else 0.0) + (t_pre if n_prefill else 0.0)
                  or 1e-30)
+    dom = "compute" if t_comp >= t_mem else "memory"
     return {
         "compute_s": t_comp,
         "memory_s": t_mem,
-        "dominant": "compute" if t_comp >= t_mem else "memory",
+        "promotion_s": t_promo,
+        "promoted_bytes": promo_bytes,
+        "dominant": "promotion" if t_promo >= max(t_comp, t_mem) and t_promo
+                    else dom,
         "kv_read_bytes": kv_read,
         "kv_write_bytes": kv_write,
         "tick_s": t,

@@ -288,6 +288,64 @@ def copy_kv_pages(cfg: ModelCfg, state, src, dst) -> Dict:
     return jax.tree_util.tree_map_with_path(leaf_copy, state)
 
 
+def _paged_leaf_axis(path, leaf) -> Optional[int]:
+    """Page axis of a paged-pool leaf (kp/vp values at ndim-4, ks/vs scale
+    rows at ndim-3 — leading layer dims of scanned stages ride along), or
+    ``None`` for per-slot state with no shareable pages."""
+    name = None
+    for p in reversed(path):
+        if isinstance(p, jax.tree_util.DictKey):
+            name = p.key
+            break
+    if name in ("kp", "vp"):
+        return leaf.ndim - 4
+    if name in ("ks", "vs"):
+        return leaf.ndim - 3
+    return None
+
+
+def gather_kv_page(cfg: ModelCfg, state, page) -> Dict[str, jax.Array]:
+    """Pull one pool page's rows out of every paged leaf — K/V values AND,
+    for int8 pools, their per-entry scale rows — as a flat {path: rows}
+    dict: the unit the tiered pool DEMOTES to host RAM.  Scale rows travel
+    with their page, so a demoted int8 page survives a later promotion
+    bit-exact (the cross-tier analogue of COW-carries-scales).
+
+    ``page`` is a traced scalar, so the engine's jit of this traces once;
+    the dict keys (stringified tree paths) are static structure that
+    ``insert_kv_page`` looks up symmetrically."""
+    out: Dict[str, jax.Array] = {}
+
+    def leaf_gather(path, leaf):
+        ax = _paged_leaf_axis(path, leaf)
+        if ax is not None:
+            out["".join(str(p) for p in path)] = \
+                jax.lax.dynamic_index_in_dim(leaf, page, axis=ax,
+                                             keepdims=False)
+
+    jax.tree_util.tree_map_with_path(leaf_gather, state)
+    return out
+
+
+def insert_kv_page(cfg: ModelCfg, state, page_data, page) -> Dict:
+    """Scatter one demoted page's rows (``gather_kv_page`` layout) back
+    into every paged leaf at device page ``page`` — the PROMOTION write.
+    Non-paged leaves pass through untouched, so the engine jits this with
+    the state donated (like the COW copy) and the pools update in place;
+    issuing it at admission lets jax's async dispatch overlap the copy with
+    the tick's compute, the data dependency through the donated state
+    keeping it correct regardless of overlap."""
+    def leaf_insert(path, leaf):
+        ax = _paged_leaf_axis(path, leaf)
+        key = "".join(str(p) for p in path)
+        if ax is None or key not in page_data:
+            return leaf
+        return jax.lax.dynamic_update_index_in_dim(
+            leaf, page_data[key].astype(leaf.dtype), page, axis=ax)
+
+    return jax.tree_util.tree_map_with_path(leaf_insert, state)
+
+
 def prefill(params, cfg: ModelCfg, state, tokens, enc_feats=None) -> Dict:
     """Teacher-forced prompt ingestion: fills every attention cache and rolls
     recurrent states forward. tokens: (B,S)."""

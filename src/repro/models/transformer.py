@@ -100,6 +100,27 @@ def init_stage(key, cfg: ModelCfg, stage: Stage):
             for i in range(len(stage.pattern))]
 
 
+@jax.custom_jvp
+def _barrier(xs):
+    """``lax.optimization_barrier`` with a differentiation rule.
+
+    The barrier serializes FSDP param gathers block-by-block (see
+    ``stage_fwd.group``), but jax defines no JVP for the primitive, which
+    made every remat'd-scan train step non-differentiable (the seed-era
+    xfail group).  The barrier is semantically the identity, so the custom
+    JVP keeps the scheduling fence on the PRIMAL path and passes tangents
+    straight through; the tangent map is the identity, so transposition
+    (grad) is exact and the fence never constrains the backward schedule —
+    the xs-grad accumulators already serialize along the scan carry."""
+    return jax.lax.optimization_barrier(xs)
+
+
+@_barrier.defjvp
+def _barrier_jvp(primals, tangents):
+    (xs,), (dxs,) = primals, tangents
+    return _barrier(xs), dxs
+
+
 def _remat(fn, mode: str):
     if mode == "none":
         return fn
@@ -139,7 +160,7 @@ def stage_fwd(params, cfg: ModelCfg, stage: Stage, x, *, positions=None, enc=Non
                 # serialize FSDP param gathers block-by-block: without the
                 # barrier the scheduler gathers the whole group's params up
                 # front (~10 GiB/dev live at jamba scale)
-                x, p_i = jax.lax.optimization_barrier((x, group_params[i]))
+                x, p_i = _barrier((x, group_params[i]))
             else:
                 p_i = group_params[i]
             blk_fn = _remat(lambda p, y, b=blk: one_block(p, b, y), cfg.remat)

@@ -43,8 +43,24 @@ from PR 1–4, and the reason any policy mix stays near peak):
   refcounted, copy-on-write prefix cache — thousands of requests sharing a
   system prompt read it from resident pages instead of re-prefilling (the
   "all2all cache mode" of the engine).  Match/index/evict policy lives in
-  the pool; the engine runs the two control-plane programs (COW page copy,
-  slot reset) the pool's decisions require.
+  the pool; the engine runs the control-plane programs (COW page copy,
+  slot reset, and the tiered page movers below) the pool's decisions
+  require.
+- **A second tier under pressure** (``host_pages=`` — this PR, the paper's
+  MCDRAM cache mode made literal): eviction DEMOTES refcount-0 prefix
+  pages to a host-RAM tier instead of dropping them — trie entry and int8
+  scale rows intact — and a prefix hit on a host-resident page PROMOTES it
+  back, the scatter issued at admission so jax async dispatch overlaps the
+  copy with the tick's compute.  Only a miss in BOTH tiers re-prefills.
+  The pool decides which pages move (``serve.pool`` events, drained in
+  chronological order before any other device mutation of the round); the
+  engine owns the bytes: one jitted gather and one donated jitted scatter
+  (``serve_step.make_page_gather`` / ``make_page_insert``), host storage a
+  plain dict of numpy pages.  A promoted slot is packed from the NEXT tick
+  (``_Slot.ready_tick``) — the overlap window — while data dependency
+  through the donated state keeps any schedule correct; transcripts stay
+  token-identical to the untiered engine because packing composition never
+  changes sampling (packing-invariant by construction since PR 2).
 - **Half-or-better bytes per resident token** (PR 4): int8 pools quantize
   at KV-write time (write-quantize → paged read-dequant → COW-with-scales),
   so the byte-denominated budget holds 2-4× the pages — more concurrent
@@ -106,6 +122,11 @@ class _Slot:
     # how many of this slot's leading pages are on that trie chain
     node: Optional[_PrefixNode] = None
     n_indexed: int = 0
+    # first tick this slot may be packed: admissions that promoted host-tier
+    # pages wait one tick so the promotion copy overlaps the current tick's
+    # compute instead of stalling it (correctness never depends on this —
+    # the data dependency through the donated state orders the scatter)
+    ready_tick: int = 0
 
 
 class ServeEngine:
@@ -115,7 +136,7 @@ class ServeEngine:
                  token_budget: int = 128, greedy: bool = True,
                  ragged: bool = True, flash_decode: bool = False,
                  prefix_cache: bool = True, kv_dtype: Optional[str] = None,
-                 scheduler=None, mesh=None):
+                 scheduler=None, mesh=None, host_pages: int = 0):
         self.params = params
         self.cfg = cfg
         # KV-head tensor parallelism (``mesh=`` — a jax.sharding.Mesh, e.g.
@@ -210,9 +231,16 @@ class ServeEngine:
             self.n_pages = max(base_pages, base_pages * ref // max(act, 1))
         else:
             self.n_pages = base_pages
-        # memory-settings layer: one pool object owns every page policy
+        # memory-settings layer: one pool object owns every page policy.
+        # ``host_pages`` > 0 adds the host-RAM tier (the paper's cache
+        # mode): eviction demotes instead of dropping, prefix hits promote
+        # back; the tier only matters with the prefix cache on — without an
+        # index there is nothing matchable to keep warm one tier down
+        self.host_pages = host_pages if self.prefix_cache else 0
         self.pool = PagePool(self.n_pages, page_size,
-                             index_enabled=self.prefix_cache)
+                             index_enabled=self.prefix_cache,
+                             host_pages=self.host_pages)
+        self._host_store: Dict[int, Dict] = {}  # host tier page bytes
         self.queue: deque = deque()
         self.slots: List[Optional[_Slot]] = [None] * batch_size
         self._uid = 0
@@ -224,6 +252,11 @@ class ServeEngine:
                        "pages_in_use_peak": 0, "admissions": 0,
                        "prefix_hits": 0, "prefix_tokens_reused": 0,
                        "cow_copies": 0, "cancelled": 0,
+                       # tiered-cache accounting: admissions that hit the
+                       # HOST tier (between warm and cold), and how many
+                       # pages those hits promoted back to the device tier
+                       "host_hits": 0, "host_pages_promoted": 0,
+                       "host_pool_pages": self.host_pages,
                        "scheduler": self.scheduler_name,
                        # memory-representation accounting: bytes of paged KV
                        # one token occupies (streams per context token at
@@ -278,6 +311,14 @@ class ServeEngine:
         self._copy = jax.jit(
             lambda s, src, dst: M.copy_kv_pages(cfg, s, src, dst),
             donate_argnums=(0,))
+        # tiered page movers: demotion gather (state stays live) and
+        # promotion scatter (state donated, pools update in place); page id
+        # is data, so each traces at most once for the engine's lifetime
+        from repro.serve.serve_step import make_page_gather, make_page_insert
+
+        self._gather_page = jax.jit(make_page_gather(cfg))
+        self._insert_page = jax.jit(make_page_insert(cfg),
+                                    donate_argnums=(0,))
 
     # -- public surface ---------------------------------------------------
     def submit(self, prompt, max_tokens: int = 16, eos_id=None, *,
@@ -371,9 +412,36 @@ class ServeEngine:
         return self.pool.reclaimable_pages
 
     def drop_prefix_cache(self) -> int:
-        """Evict every refcount-0 cached page (A/B runs, tests).  Returns
-        the number of pages returned to the free list."""
-        return self.pool.drop_cache()
+        """Discard every refcount-0 cached page in BOTH tiers (A/B runs,
+        tests).  Returns the number of device pages returned to the free
+        list."""
+        n = self.pool.drop_cache()
+        for ev in self.pool.drain_events():  # hevicts only: free host bytes
+            self._host_store.pop(ev[1], None)
+        return n
+
+    def _apply_pool_events(self, state):
+        """Apply the pool's tier-traffic log to device state IN ORDER,
+        before any other device mutation of the admission round: a demoted
+        page's bytes are gathered out BEFORE its freed device page can be
+        reused (the free-then-realloc chain inside one round is resolved by
+        chronology), a promoted page's bytes scatter into its newly
+        allocated device page, an hevicted slot's host bytes are dropped.
+        The gather is materialized to numpy (host RAM IS the tier); the
+        scatter donates the state, so pools update in place and jax's async
+        dispatch overlaps the copy with the tick that follows."""
+        for ev in self.pool.drain_events():
+            if ev[0] == "demote":
+                _, page, slot = ev
+                rows = self._gather_page(state, np.int32(page))
+                self._host_store[slot] = jax.tree.map(np.asarray, rows)
+            elif ev[0] == "promote":
+                _, slot, page = ev
+                state = self._insert_page(state, self._host_store.pop(slot),
+                                          np.int32(page))
+            else:  # ("hevict", slot)
+                self._host_store.pop(ev[1], None)
+        return state
 
     # -- admission --------------------------------------------------------
     def _pages_needed(self, req: Request, matched_pages: int = 0) -> int:
@@ -395,7 +463,8 @@ class ServeEngine:
             slot_fill=tuple(s.fill if s is not None else 0
                             for s in self.slots),
             budget=self.budget, chunk=self.chunk, page_size=self.page_size,
-            match_len=self.pool.probe_prefix_len)
+            match_len=self.pool.probe_prefix_len,
+            match_split=self.pool.probe_prefix_split)
 
     def _pack_order(self, order, slots_in: List[int],
                     fn_name: str) -> List[int]:
@@ -463,13 +532,17 @@ class ServeEngine:
                     continue
                 req = cands[ci]
             node, mpages, matched, cow = self.pool.match_prefix(req.prompt)
+            # a HOST-tier hit is the third candidate class between warm and
+            # cold: the pages are matchable but each costs one device page
+            # to promote, so they count as demand, not as supply
+            n_host = sum(1 for p in mpages if self.pool.is_host(p))
             need = self._pages_needed(req, matched_pages=len(mpages))
-            if cow is not None and need > self.pool.available(
+            if cow is not None and need + n_host > self.pool.available(
                     mpages + [cow[0]]):
                 cow = None  # pinning the COW source would leave the pool
                 # short one page: forgo the partial-page reuse (it is an
                 # optimization; the full-page match alone always fits)
-            if need > self.pool.available(mpages):
+            if need + n_host > self.pool.available(mpages):
                 break  # stop at the first infeasible candidate: the pool's
                 # reservation discipline outranks any policy's ordering
             if cands is None:
@@ -477,7 +550,11 @@ class ServeEngine:
             else:
                 ci += 1
                 admitted.add(req.uid)
-            self.pool.share(mpages)
+            mpages = self.pool.acquire(mpages)  # +1 ref each; promotes
+            # host hits (events drained into device state in the epilogue)
+            if n_host:
+                self._stats["host_hits"] += 1
+                self._stats["host_pages_promoted"] += n_host
             if cow is not None:
                 self.pool.share([cow[0]])  # pin the COW source vs eviction
                 cow_pins.append(cow[0])
@@ -490,7 +567,11 @@ class ServeEngine:
             rows[b, :len(pages)] = pages
             plen[b] = matched
             s = _Slot(req, pages, fill=matched, node=node,
-                      n_indexed=len(mpages))
+                      n_indexed=len(mpages),
+                      # a promotion's scatter overlaps this tick's compute:
+                      # hold the slot out of the pack until the next tick
+                      ready_tick=(self._stats["ticks"] + 1 if n_host
+                                  else self._stats["ticks"]))
             if matched >= len(req.prompt):
                 # whole prompt cached: straight to decode, same resume
                 # scheme as a completed prefill (last token, position L)
@@ -508,6 +589,10 @@ class ServeEngine:
                                    if r.uid not in admitted)
             self._stats["pages_in_use_peak"] = max(
                 self._stats["pages_in_use_peak"], self.pool.pages_in_use)
+            # tier traffic first: demote gathers must read pages before the
+            # COW copy / reset / tick can overwrite them, promote scatters
+            # must land in the state the tick consumes
+            state = self._apply_pool_events(state)
             if n_cow:
                 # device-side ordering is by data dependency (copy feeds the
                 # reset feeds the tick), so the host may unpin right away
@@ -598,10 +683,13 @@ class ServeEngine:
         logit_idx = np.full(self.B, T, np.int32)
         n = 0
         sampling: List[int] = []
+        tick = self._stats["ticks"]
         ready = [b for b, s in enumerate(self.slots)
-                 if s is not None and s.fill >= len(s.req.prompt)]
+                 if s is not None and s.ready_tick <= tick
+                 and s.fill >= len(s.req.prompt)]
         filling = [b for b, s in enumerate(self.slots)
-                   if s is not None and s.fill < len(s.req.prompt)]
+                   if s is not None and s.ready_tick <= tick
+                   and s.fill < len(s.req.prompt)]
         if self._default_pack:
             decode_order, prefill_order = ready, filling
         else:

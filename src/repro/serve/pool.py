@@ -1,39 +1,74 @@
-"""PagePool — the serving stack's memory-management layer.
+"""PagePool — the serving stack's TWO-TIER memory-management layer.
 
 The paper separates the SETTINGS layer (memory mode, affinity — set once,
 system-wide) from the WORKLOAD layer (each user's Nproc × Nthread choice),
 and shows that keeping the former uniform is what lets every choice of the
 latter stay near peak.  ``PagePool`` is the settings layer of the serving
 stack: one object owns every page-level policy — allocation, refcounts,
-the prefix trie, copy-on-write matching, LRU eviction, byte-denominated
+the prefix trie, copy-on-write matching, tiered eviction, byte-denominated
 budgeting — behind a narrow interface, so the workload layer (the
 ``Scheduler`` policies in ``serve.scheduler``) and the orchestration layer
 (``serve.engine.ServeEngine``) can change freely without touching it.
 
+**Tiers (the paper's MCDRAM cache mode, applied to serving).**  The paper's
+central result is that *cache* mode beats flat mode because the hot working
+set stays resident in the fast tier while the cold set lives one tier down.
+The pool reproduces that hierarchy for the KV prefix cache: the DEVICE tier
+is ``n_pages`` of fast pool memory, and an optional HOST tier
+(``host_pages`` slots of host RAM) catches what pressure pushes out.  The
+page lifecycle becomes alloc → (release) → demote → promote → free:
+
+- **Demotion** — under allocation pressure, the LRU refcount-0 device node
+  with no device children moves its page to a host slot instead of being
+  discarded.  Its trie entry survives (annotated with the new tier by its
+  encoded page id), so the prefix stays matchable; a ("demote", page, slot)
+  event tells the engine to gather the page's bytes — values AND int8 scale
+  rows — into host storage before the device page is reused.
+- **Promotion** — a ``match_prefix`` hit on a host-resident page is
+  ``acquire``d back: a device page is allocated (possibly demoting someone
+  else), the trie entry returns to the device tier, and a
+  ("promote", slot, page) event tells the engine to scatter the host bytes
+  back into the pool — issued at admission so jax's async dispatch overlaps
+  the copy with the current tick's compute.
+- **Host eviction** — the host tier is itself finite: making room for a
+  demotion drops the LRU childless host node (("hevict", slot) event).
+  Only when BOTH tiers miss does a request pay full re-prefill.
+
+Host-tier pages carry no refcounts (the host tier is a pure cache; live
+requests only ever hold device pages) and are named by ENCODED ids
+``n_pages + slot`` wherever they appear in match results, so the device
+region of the trie stays prefix-closed: every ancestor of a device page is
+a device page, which is what lets a matched chain promote root-first.
+
 The pool is pure host-side bookkeeping over integer page ids: it never sees
 a model, an array of KV data, or a device — which is what makes it
 unit-testable in microseconds (tests/test_pool.py) and reusable by any
-engine.  Device-side effects (the COW page copy, the slot reset) remain the
-engine's job; the pool only decides WHICH pages.
+engine.  Device-side effects (the COW page copy, the slot reset, the
+demote gather / promote scatter ordered by ``drain_events()``) remain the
+engine's job; the pool only decides WHICH pages move WHERE.
 
 Interface (all O(pages) or better, no jax imports):
 
-- ``alloc(n)`` — pop ``n`` free pages (refcount 1 each), LRU-evicting
-  refcount-0 cached pages under pressure; raises if the demand can never be
-  met (callers gate on ``available()`` first).
+- ``alloc(n)`` — pop ``n`` free pages (refcount 1 each), demoting (or,
+  untiered, dropping) refcount-0 cached pages under pressure; raises if the
+  demand can never be met (callers gate on ``available()`` first).
 - ``share(pages)`` / ``release(pages)`` — refcount ++/--.  A released page
   stays RESIDENT if the prefix trie indexes it (the pool IS the cache) and
   returns to the free list otherwise.
-- ``match_prefix(prompt)`` — longest cached prefix: full trie pages to map
-  (refcounts untouched; callers ``share`` what they keep) plus an optional
-  mid-page copy-on-write candidate ``(src_page, extra_tokens)``.
+- ``match_prefix(prompt)`` — longest cached prefix ACROSS BOTH TIERS: full
+  trie pages to map (host hits appear as encoded ids; refcounts untouched)
+  plus an optional mid-page copy-on-write candidate (device tier only).
+- ``acquire(pages)`` — take one reference per matched page, promoting any
+  host-tier hits; returns the resolved all-device page list.
 - ``index_page(node, key, page)`` — extend a cached chain by one full page
   as prefill passes each page boundary; returns the chain node, or ``None``
   when an equivalent page already owns the prefix.
-- ``probe_prefix_len(prompt)`` — non-mutating trie walk (no LRU touch) for
-  schedulers ranking queued requests by expected reuse.
-- ``evict_one()`` / ``drop_cache()`` / ``available(pinned)`` — eviction and
-  admission-supply accounting.
+- ``probe_prefix_len(prompt)`` / ``probe_prefix_split(prompt)`` —
+  non-mutating trie walks (no LRU touch) for schedulers ranking queued
+  requests by expected reuse, totalled or split (device, host).
+- ``evict_one()`` / ``drop_cache()`` / ``available(pinned)`` — reclamation
+  and admission-supply accounting; ``drain_events()`` hands the engine the
+  chronological demote/promote/hevict log to apply to device state.
 
 Byte budgeting: ``kv_page_bytes`` / ``kv_bytes_per_token`` price a page (or
 token) of paged KV across every global-attention layer for a storage dtype,
@@ -107,14 +142,18 @@ class _PrefixNode:
 
 
 class PagePool:
-    """Refcounted page allocator doubling as a prefix cache (see module
-    docstring).  ``index_enabled=False`` degrades it to a plain FIFO page
-    allocator: every match misses and released pages free immediately."""
+    """Refcounted two-tier page allocator doubling as a prefix cache (see
+    module docstring).  ``index_enabled=False`` degrades it to a plain FIFO
+    page allocator: every match misses and released pages free immediately.
+    ``host_pages=0`` (the default) disables the host tier: eviction drops
+    pages exactly as it always did."""
 
     def __init__(self, n_pages: int, page_size: int, *,
-                 index_enabled: bool = True):
+                 index_enabled: bool = True, host_pages: int = 0):
         if n_pages < 0 or page_size < 1:
             raise ValueError(f"bad pool shape ({n_pages=}, {page_size=})")
+        if host_pages < 0:
+            raise ValueError(f"bad host tier size ({host_pages=})")
         self.n_pages = n_pages
         self.page_size = page_size
         self.index_enabled = bool(index_enabled)
@@ -123,7 +162,17 @@ class PagePool:
         self._root = _PrefixNode(None, -1, None)  # trie of cached prefixes
         self._page_node: Dict[int, _PrefixNode] = {}  # page -> trie node
         self._clock = 0  # LRU counter (bumped per touch)
-        self.stats = {"evictions": 0}
+        # host tier: slot -> trie node for demoted pages (encoded in the
+        # trie as page id ``n_pages + slot``); no refcounts — a pure cache
+        self.host_pages = int(host_pages)
+        self._host_free: List[int] = list(range(self.host_pages))
+        self._host_node: Dict[int, _PrefixNode] = {}
+        self._host_pinned: set = set()  # slots mid-promotion: not evictable
+        # chronological demote/promote/hevict log for the engine to apply
+        # to device state (``drain_events``)
+        self.events: List[tuple] = []
+        self.stats = {"evictions": 0, "demotions": 0, "promotions": 0,
+                      "host_evictions": 0}
 
     # -- introspection ----------------------------------------------------
     @property
@@ -146,20 +195,51 @@ class PagePool:
         all of these out; equals ``n_pages`` whenever no page is pinned."""
         return len(self._free) + self.evictable()
 
+    @property
+    def host_cached_pages(self) -> int:
+        """Pages resident in the host tier (demoted, still matchable)."""
+        return len(self._host_node)
+
+    @property
+    def host_free_slots(self) -> int:
+        return len(self._host_free)
+
+    def is_host(self, page: int) -> bool:
+        """True for an encoded host-tier page id (``n_pages + slot``)."""
+        return page >= self.n_pages
+
     def ref(self, page: int) -> int:
         return int(self._ref[page])
 
     def evictable(self) -> int:
-        """Cached pages reclaimable under pressure (refcount 0)."""
+        """Cached device pages reclaimable under pressure (refcount 0) —
+        by demotion with a host tier, by dropping without one; either way
+        the device page becomes allocator supply."""
         return sum(1 for p in self._page_node if self._ref[p] == 0)
 
     def available(self, pinned: Sequence[int] = ()) -> int:
-        """Pages an admission could obtain AFTER it pins ``pinned``: free +
-        evictable, minus currently-refcount-0 cached pages the caller is
-        about to hold — a page the request itself pins must not be counted
-        as reclaimable supply for its own allocation."""
-        held = sum(1 for p in set(pinned) if self._ref[p] == 0)
+        """Device pages an admission could obtain AFTER it pins ``pinned``:
+        free + evictable, minus currently-refcount-0 cached pages the caller
+        is about to hold — a page the request itself pins must not be
+        counted as reclaimable supply for its own allocation.  Encoded
+        host-tier ids in ``pinned`` are ignored: promoting them CONSUMES a
+        device page, which callers price into their demand instead."""
+        held = sum(1 for p in set(pinned)
+                   if p < self.n_pages and self._ref[p] == 0)
         return len(self._free) + self.evictable() - held
+
+    def drain_events(self) -> List[tuple]:
+        """Hand over (and clear) the chronological tier-traffic log.  The
+        engine must apply entries IN ORDER before any other device-state
+        mutation of the admission round: ("demote", page, slot) gathers the
+        device page's bytes into host storage BEFORE the freed page is
+        reused, ("promote", slot, page) scatters host bytes into the newly
+        allocated device page, ("hevict", slot) discards host storage.  A
+        slot freed by a promote may be reused by a later demote in the same
+        round — chronological application makes that correct by
+        construction."""
+        ev, self.events = self.events, []
+        return ev
 
     # -- refcounts / allocation -------------------------------------------
     def alloc(self, n: int) -> List[int]:
@@ -181,13 +261,53 @@ class PagePool:
 
     def release(self, pages: Sequence[int]) -> None:
         """Drop one reference per page.  Refcount-0 pages stay resident if
-        the prefix trie indexes them (the pool IS the cache; LRU eviction
+        the prefix trie indexes them (the pool IS the cache; tiered eviction
         reclaims them under pressure) and are freed immediately otherwise."""
         for p in pages:
             self._ref[p] -= 1
             assert self._ref[p] >= 0, f"page {p} over-released"
             if self._ref[p] == 0 and p not in self._page_node:
                 self._free.append(p)
+
+    def acquire(self, pages: Sequence[int]) -> List[int]:
+        """Take one reference per matched page, PROMOTING host-tier hits.
+
+        Device pages are ``share``d; encoded host ids get a device page
+        allocated (demoting under pressure), their trie entry moved back to
+        the device tier, and a ("promote", slot, page) event appended for
+        the engine to scatter the host bytes in.  Returns the resolved
+        all-device page list — every returned page carries one reference
+        for the caller.
+
+        Pages must arrive in chain (root-first) order, as ``match_prefix``
+        returns them: the matched chain's device prefix is then referenced
+        before any promotion can trigger a demotion, and each promotion
+        re-closes the device region of the trie before the next.  Pending
+        host slots are pinned against host eviction for the duration — a
+        promotion's own demotions can never evict the tail it is about to
+        promote."""
+        pending = {p - self.n_pages for p in pages if p >= self.n_pages}
+        self._host_pinned |= pending
+        out: List[int] = []
+        try:
+            for p in pages:
+                if p < self.n_pages:
+                    self._ref[p] += 1
+                    out.append(p)
+                    continue
+                slot = p - self.n_pages
+                (dev,) = self.alloc(1)  # arrives refcounted
+                node = self._host_node.pop(slot)
+                node.page = dev
+                self._page_node[dev] = node
+                self._host_free.append(slot)
+                self._host_pinned.discard(slot)
+                self.events.append(("promote", slot, dev))
+                self.stats["promotions"] += 1
+                out.append(dev)
+        finally:
+            self._host_pinned -= pending
+        return out
 
     # -- prefix index -----------------------------------------------------
     @property
@@ -215,13 +335,19 @@ class PagePool:
         return node, pages, matched
 
     def match_prefix(self, prompt: np.ndarray):
-        """Longest cached prefix of ``prompt``: walk the trie a full page at
-        a time, then probe the children of the last matched node for a
-        partial-page hit (longest common prefix ≥ 1 token → COW candidate).
+        """Longest cached prefix of ``prompt`` ACROSS BOTH TIERS: walk the
+        trie a full page at a time, then probe the children of the last
+        matched node for a partial-page hit (longest common prefix ≥ 1
+        token → COW candidate; device tier only — a mid-page reuse is an
+        optimization, not worth a promotion).
 
         Returns (node, pages, matched_tokens, cow) with ``pages`` the full
-        shared pages and ``cow`` either None or (src_page, extra_tokens).
-        Refcounts are NOT touched — the caller ``share``s what it keeps."""
+        shared pages IN CHAIN ORDER — host-tier hits appear as encoded ids
+        ``n_pages + slot``, always a contiguous tail of the list (the
+        device region of the trie is prefix-closed) — and ``cow`` either
+        None or (src_page, extra_tokens).  Refcounts are NOT touched — the
+        caller ``acquire``s what it keeps (which also promotes the host
+        hits)."""
         if not self.index_enabled:
             return self._root, [], 0, None
         self._clock += 1
@@ -231,6 +357,8 @@ class PagePool:
         if rem.size and node.children:
             best_len, best = 0, None
             for key, child in node.children.items():
+                if self.is_host(child.page):
+                    continue
                 k = np.asarray(key[:rem.size], np.int32)
                 lcp = int((np.cumprod(k == rem[:k.size]) if k.size else
                            np.zeros(0)).sum())
@@ -242,12 +370,23 @@ class PagePool:
         return node, pages, matched, cow
 
     def probe_prefix_len(self, prompt: np.ndarray) -> int:
-        """Tokens of ``prompt`` covered by cached FULL pages — a
-        non-mutating ``match_prefix`` (no LRU touch) for schedulers ranking
-        queued requests by expected reuse."""
+        """Tokens of ``prompt`` covered by cached FULL pages (either tier)
+        — a non-mutating ``match_prefix`` (no LRU touch) for schedulers
+        ranking queued requests by expected reuse."""
         if not self.index_enabled:
             return 0
         return self._walk_full_pages(prompt, touch=False)[2]
+
+    def probe_prefix_split(self, prompt: np.ndarray) -> Tuple[int, int]:
+        """(device_tokens, host_tokens) of the cached full-page prefix — a
+        non-mutating probe for tier-aware schedulers: a device hit is free,
+        a host hit costs one promotion copy, a miss costs re-prefill, so
+        the three candidate classes rank warm > host-warm > cold."""
+        if not self.index_enabled:
+            return 0, 0
+        _, pages, matched = self._walk_full_pages(prompt, touch=False)
+        host = sum(1 for p in pages if self.is_host(p)) * self.page_size
+        return matched - host, host
 
     def index_page(self, node: _PrefixNode, key: Tuple[int, ...],
                    page: int) -> Optional[_PrefixNode]:
@@ -269,34 +408,116 @@ class PagePool:
         child.last_used = self._clock
         return child
 
-    # -- eviction ---------------------------------------------------------
+    # -- eviction / demotion ----------------------------------------------
     def evict_one(self) -> bool:
-        """Drop the least-recently-used refcount-0 LEAF from the trie and
-        return its page to the free list.  Leaf-first keeps every cached
-        chain reachable; a ref-0 node's descendants are all ref-0 (active
-        requests hold their whole matched path), so repetition drains any
-        evictable subtree."""
+        """Reclaim one device page from the cache.
+
+        With a host tier this is a DEMOTION: the least-recently-used
+        refcount-0 device node with no DEVICE children (host children may
+        hang below — the device region stays prefix-closed) moves its page
+        to a host slot; the trie entry survives with an encoded host id and
+        a ("demote", page, slot) event tells the engine to gather the bytes
+        out before the freed page is reused.  Host capacity is made by
+        dropping the LRU childless, unpinned host node first.
+
+        Without a host tier — or in the corner where every host slot is
+        pinned by an in-flight promotion — the page is DROPPED as the
+        untiered pool always did (any host descendants are dropped with it
+        so every surviving chain stays rooted).  Device-leaf-first plus
+        refcount monotonicity (active requests hold their whole matched
+        path) means repetition drains any evictable subtree."""
         best = None
         stack = list(self._root.children.values())
         while stack:
             nd = stack.pop()
             stack.extend(nd.children.values())
-            if nd.children or self._ref[nd.page] != 0:
+            if self.is_host(nd.page) or self._ref[nd.page] != 0:
+                continue
+            if any(not self.is_host(c.page) for c in nd.children.values()):
                 continue
             if best is None or nd.last_used < best.last_used:
                 best = nd
         if best is None:
             return False
-        del best.parent.children[best.key]
+        slot = self._host_slot_for_demote()
+        if slot is None:
+            self._drop_device_node(best)
+            return True
+        self.events.append(("demote", best.page, slot))
         del self._page_node[best.page]
         self._free.append(best.page)
-        self.stats["evictions"] += 1
+        self._host_node[slot] = best
+        best.page = self.n_pages + slot
+        self.stats["demotions"] += 1
         return True
 
+    def _host_slot_for_demote(self) -> Optional[int]:
+        """A free host slot for an incoming demotion, evicting the LRU
+        childless (and unpinned) host node if the tier is full; ``None``
+        when the tier is disabled or nothing can make room."""
+        if self.host_pages == 0:
+            return None
+        if self._host_free:
+            return self._host_free.pop()
+        best = None
+        for slot, nd in self._host_node.items():
+            if slot in self._host_pinned or nd.children:
+                continue
+            if best is None or nd.last_used < self._host_node[best].last_used:
+                best = slot
+        if best is None:
+            return None
+        self._hevict(self._host_node[best])
+        return self._host_free.pop()
+
+    def _hevict(self, node: _PrefixNode) -> None:
+        """Drop one host-tier node: trie entry out, slot freed, ("hevict",
+        slot) event so the engine discards the host-side bytes."""
+        slot = node.page - self.n_pages
+        del node.parent.children[node.key]
+        del self._host_node[slot]
+        self._host_free.append(slot)
+        self.events.append(("hevict", slot))
+        self.stats["host_evictions"] += 1
+
+    def _drop_device_node(self, node: _PrefixNode) -> None:
+        """Discard a device node outright (untiered eviction, or the
+        all-host-slots-pinned corner), cascading its host descendants
+        children-first so no chain is left unrooted."""
+        def drop_host(nd: _PrefixNode) -> None:
+            for c in list(nd.children.values()):
+                drop_host(c)
+            if self.is_host(nd.page):
+                self._hevict(nd)
+        for c in list(node.children.values()):
+            drop_host(c)
+        del node.parent.children[node.key]
+        del self._page_node[node.page]
+        self._free.append(node.page)
+        self.stats["evictions"] += 1
+
     def drop_cache(self) -> int:
-        """Evict every refcount-0 cached page (A/B runs, tests).  Returns
-        the number of pages returned to the free list."""
+        """Discard every refcount-0 cached page in BOTH tiers (A/B runs,
+        tests) — nothing is demoted; the cache is emptied.  Returns the
+        number of DEVICE pages returned to the free list.  Callers holding
+        host-side storage must still drain the ("hevict", slot) events."""
         n = 0
-        while self.evict_one():
-            n += 1
+
+        def drop(nd: _PrefixNode) -> None:
+            nonlocal n
+            for c in list(nd.children.values()):
+                drop(c)
+            if nd.children:
+                return  # a kept (referenced) descendant pins the chain
+            if self.is_host(nd.page):
+                self._hevict(nd)
+            elif self._ref[nd.page] == 0:
+                del nd.parent.children[nd.key]
+                del self._page_node[nd.page]
+                self._free.append(nd.page)
+                self.stats["evictions"] += 1
+                n += 1
+
+        for c in list(self._root.children.values()):
+            drop(c)
         return n

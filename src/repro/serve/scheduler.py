@@ -50,8 +50,13 @@ Policies:
   Under a saturating interactive stream a batch head of line is bypassed
   at most ``max_bypass`` times before a strict-FIFO round admits it —
   priority inverts latency, never liveness.
+- ``ClassThenFamilyScheduler`` — the composite: SLO class first, then
+  prefix-family grouping within each class, sharing SloScheduler's prefill
+  packing.  Tier-aware via ``EngineView.match_split``: within a class,
+  device-warm families admit before host-warm before cold (a host hit pays
+  a promotion copy; a miss pays re-prefill).
 
-``benchmarks/serve_sweep.py:scheduler_ab_scenario`` A/Bs the three on mixed
+``benchmarks/serve_sweep.py:scheduler_ab_scenario`` A/Bs the policies on mixed
 shared-prefix Poisson traffic; ``core.autotune.select_serve_defaults``
 carries a ``scheduler`` axis so the tuned-once serving config names its
 policy alongside token_budget / page_size / kv_dtype.
@@ -73,7 +78,12 @@ class EngineView:
     ``queue``/``slot_requests`` reference live ``Request`` objects —
     schedulers must treat them as immutable.  ``match_len`` is
     ``PagePool.probe_prefix_len``: tokens of a prompt covered by indexed
-    full pages, probed WITHOUT mutating LRU state.
+    full pages, probed WITHOUT mutating LRU state.  ``match_split`` is the
+    tier-aware refinement (``PagePool.probe_prefix_split``): the same
+    tokens split (device, host) — a device hit is free, a host hit costs a
+    promotion copy, a miss costs re-prefill — so policies can rank the
+    three candidate classes warm > host-warm > cold.  ``None`` when the
+    engine predates tiering (policies fall back to ``match_len``).
 
     For ``decode_order``/``prefill_order`` consultations ``queue`` is
     EMPTY: pack ordering is a slots concern, and snapshotting a deep
@@ -87,6 +97,7 @@ class EngineView:
     chunk: int
     page_size: int
     match_len: Callable[[np.ndarray], int]
+    match_split: Optional[Callable[[np.ndarray], Tuple[int, int]]] = None
 
 
 class Scheduler:
@@ -181,10 +192,43 @@ class _BoundedReorderScheduler(Scheduler):
         return order
 
 
+def _family_order(view: EngineView, idxs: Sequence[int]) -> List[int]:
+    """Order queue indices ``idxs`` by shared-prefix family — the policy
+    core the prefix-aware and class-then-family schedulers share.
+
+    Family key = the trie's first key (first FULL prompt page; sub-page
+    prompts can never share pages -> singleton families).  Families rank
+    warmest-first so a resident prefix is reused before eviction pressure
+    reclaims it, and with a tiered pool (``view.match_split``) DEVICE
+    residency outranks HOST residency: a device hit is free, a host hit
+    pays one promotion copy — warm > host-warm > cold, the three candidate
+    classes of tiered admission.  Ties break FIFO by earliest member, and
+    members stay in FIFO order within their family."""
+    q, P = view.queue, view.page_size
+
+    def family(r: Request):
+        return (tuple(int(t) for t in r.prompt[:P])
+                if len(r.prompt) >= P else ("solo", r.uid))
+
+    def warmth(i: int) -> Tuple[int, int]:
+        if view.match_split is not None:
+            return view.match_split(q[i].prompt)
+        return view.match_len(q[i].prompt), 0
+
+    groups: Dict[tuple, List[int]] = {}
+    for i in idxs:
+        groups.setdefault(family(q[i]), []).append(i)
+    ranked = sorted(groups.values(),
+                    key=lambda g: (-max(warmth(i)[0] for i in g),
+                                   -max(warmth(i)[1] for i in g), g[0]))
+    return [i for g in ranked for i in g]
+
+
 class PrefixAwareScheduler(_BoundedReorderScheduler):
     """Group the admission window by shared-prefix family (see module
-    docstring).  ``depth`` bounds reordering; ``max_bypass`` bounds how
-    many times the head of line can actually be overtaken."""
+    docstring and ``_family_order``).  ``depth`` bounds reordering;
+    ``max_bypass`` bounds how many times the head of line can actually be
+    overtaken."""
 
     name = "prefix-aware"
 
@@ -194,23 +238,7 @@ class PrefixAwareScheduler(_BoundedReorderScheduler):
     def _reorder(self, view: EngineView) -> List[int]:
         q = view.queue
         D = min(self.depth, len(q))
-        P = view.page_size
-        # family key = the trie's first key (first FULL prompt page);
-        # sub-page prompts can never share pages -> singleton families
-        def family(r: Request):
-            return (tuple(int(t) for t in r.prompt[:P])
-                    if len(r.prompt) >= P else ("solo", r.uid))
-
-        groups: Dict[tuple, List[int]] = {}
-        for i in range(D):
-            groups.setdefault(family(q[i]), []).append(i)
-        # warm families first (their prefix is resident NOW — reuse it
-        # before eviction pressure reclaims it), then FIFO by earliest
-        # member; members stay in FIFO order within their family
-        ranked = sorted(groups.values(),
-                        key=lambda g: (-max(view.match_len(q[i].prompt)
-                                            for i in g), g[0]))
-        return [i for g in ranked for i in g] + list(range(D, len(q)))
+        return _family_order(view, range(D)) + list(range(D, len(q)))
 
 
 class SloScheduler(_BoundedReorderScheduler):
@@ -241,10 +269,49 @@ class SloScheduler(_BoundedReorderScheduler):
                       key=lambda b: (-view.slot_requests[b].priority, b))
 
 
+class ClassThenFamilyScheduler(_BoundedReorderScheduler):
+    """Composite policy: SLO class FIRST, prefix-family grouping WITHIN a
+    class — the ROADMAP's ``slo × prefix-aware``.
+
+    Admission partitions the window by ``Request.priority`` (higher class
+    first, exactly SloScheduler's axis), then orders each class by
+    ``_family_order`` — so an interactive arrival still never queues behind
+    a batch prefill, while siblings of one shared prompt land in the same
+    admission wave and a warm family admits before pressure reclaims its
+    pages.  Tier-aware for free: ``_family_order`` reads
+    ``EngineView.match_split``, so within a class device-resident families
+    outrank host-resident ones outrank cold — the promotion-cost ordering
+    of tiered admission.  Prefill packing is SloScheduler's
+    (interactive chunks take leftover budget first); the fairness backstop
+    is the shared ``_BoundedReorderScheduler`` bound."""
+
+    name = "class-then-family"
+
+    def __init__(self, depth: int = 16, max_bypass: int = 4):
+        super().__init__(depth, max_bypass)
+
+    def _reorder(self, view: EngineView) -> List[int]:
+        q = view.queue
+        D = min(self.depth, len(q))
+        classes: Dict[int, List[int]] = {}
+        for i in range(D):
+            classes.setdefault(-q[i].priority, []).append(i)
+        out: List[int] = []
+        for c in sorted(classes):
+            out.extend(_family_order(view, classes[c]))
+        return out + list(range(D, len(q)))
+
+    def prefill_order(self, view: EngineView,
+                      filling: Sequence[int]) -> Sequence[int]:
+        return sorted(filling,
+                      key=lambda b: (-view.slot_requests[b].priority, b))
+
+
 SCHEDULERS = {
     "fifo": FifoScheduler,
     "prefix-aware": PrefixAwareScheduler,
     "slo": SloScheduler,
+    "class-then-family": ClassThenFamilyScheduler,
 }
 
 

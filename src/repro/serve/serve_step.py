@@ -22,6 +22,15 @@ positions via ``models.model.reset_paged_slots`` (a separate control-plane
 program, like the COW page copy ``models.model.copy_kv_pages``), and the
 serve-path trace count stays at exactly one for every policy.
 
+The TIERED pool (``host_pages=``) adds two more control-plane programs, the
+page movers built by ``make_page_gather`` / ``make_page_insert``: demotion
+gathers one page's rows (kp/vp values and int8 ks/vs scale rows together)
+out to host RAM, promotion scatters them back into a freshly allocated
+device page.  Both take the page id as DATA (one trace each for the
+engine's lifetime), and the insert is jitted with the state donated — same
+contracts as the COW copy, so tiering never perturbs the serve-path trace
+count or the no-copy hot loop.
+
 ``STATE_AXES`` names the logical axes of every decode-state leaf — the
 lock-step cache (k/v/k_pos/pos) and the ragged/paged engine's leaves (kp/vp
 page pools, ptab block tables, kpos per-slot positions, slen fill counts) —
@@ -84,6 +93,29 @@ def make_ragged_step(cfg: ModelCfg, *, width: int, flash_decode: bool = False):
                              flash_decode=flash_decode)
 
     return ragged_step
+
+
+def make_page_gather(cfg: ModelCfg):
+    """Demotion mover: ``f(state, page) -> {path: rows}`` pulling one pool
+    page's K/V values and int8 scale rows out of every paged leaf (see
+    ``models.model.gather_kv_page``).  Jit WITHOUT donation — the state
+    stays live; the engine materializes the result into host RAM."""
+    def page_gather(state, page):
+        return M.gather_kv_page(cfg, state, page)
+
+    return page_gather
+
+
+def make_page_insert(cfg: ModelCfg):
+    """Promotion mover: ``f(state, page_data, page) -> state`` scattering a
+    demoted page's rows back into the pools at device page ``page``.  Jit
+    with ``donate_argnums=(0,)`` so the pools update in place; the engine
+    issues it at admission and lets async dispatch overlap the copy with
+    the tick's compute (see ``models.model.insert_kv_page``)."""
+    def page_insert(state, page_data, page):
+        return M.insert_kv_page(cfg, state, page_data, page)
+
+    return page_insert
 
 
 # leaf name -> logical axes for decode-state leaves (unstacked; a scanned

@@ -1,3 +1,4 @@
+import gc
 import os
 import subprocess
 import sys
@@ -8,6 +9,42 @@ import pytest
 
 REPO = Path(__file__).resolve().parent.parent
 SRC = str(REPO / "src")
+
+
+@pytest.fixture(autouse=True)
+def _reclaim_jit_mappings():
+    """Collect dropped engines (and their compiled XLA executables) before
+    the process runs out of memory mappings.
+
+    Each compiled CPU executable holds ~100 ``mmap`` regions for its JIT
+    code, and a dead ``ServeEngine`` sits in a reference cycle until the
+    cyclic GC runs — so a full-suite process accumulates mappings
+    monotonically and eventually trips ``vm.max_map_count`` (65530
+    default), which XLA's code allocator answers with a hard segfault
+    mid-compile.  Collecting whenever the map count crosses a threshold
+    well below the ceiling keeps the live set bounded at negligible cost
+    (the count check is one /proc read per test).  Executables still
+    reachable through jax's global jit caches survive a plain collect —
+    if one doesn't bring the count back under a high-water mark, drop
+    those caches too (rare, costs only recompiles)."""
+    yield
+
+    def n_maps():
+        try:
+            with open(f"/proc/{os.getpid()}/maps") as f:
+                return sum(1 for _ in f)
+        except OSError:  # no procfs: treat as always over threshold
+            return None
+
+    n = n_maps()
+    if n is None or n > 30_000:
+        gc.collect()
+        n = n_maps()
+        if n is not None and n > 45_000:
+            import jax
+
+            jax.clear_caches()
+            gc.collect()
 
 
 def run_multidevice(code: str, n_devices: int = 8, timeout: int = 600) -> str:

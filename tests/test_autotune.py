@@ -39,11 +39,12 @@ def test_select_serve_defaults_emits_one_config():
     assert best["prefill_chunk"] in (16, 32, 64)
     assert best["page_size"] in (8, 16, 32)
     assert best["kv_dtype"] in ("float32", "bfloat16", "int8")
-    assert best["scheduler"] in ("fifo", "prefix-aware", "slo")
+    assert best["scheduler"] in ("fifo", "prefix-aware", "slo",
+                                 "class-then-family")
     assert 0.0 < best["score"] <= 1.0
     # full grid evaluated (chunks must leave decode room in the budget)
     n_valid = sum(1 for tb in (64, 128, 256) for pc in (16, 32, 64)
-                  if pc < tb) * 3 * 3 * 3
+                  if pc < tb) * 3 * 3 * 4
     assert len(table) == n_valid
     # max-min selection: nobody beats the winner's worst-case fraction
     assert all(r["score"] <= best["score"] + 1e-12 for r in table)

@@ -15,18 +15,10 @@ from repro.train.train_step import init_train_state, make_train_step
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 32
 
-# Pre-existing since the seed (documented in CHANGES.md): the train step for
-# these archs hits jax's missing optimization_barrier differentiation rule
-# (remat'd scanned stages).  strict=False: a fixed jax yields XPASS, not red.
-_BARRIER_XFAIL = {"gemma3-4b", "llama4-maverick-400b-a17b",
-                  "jamba-1.5-large-398b", "llama-3.2-vision-11b",
-                  "xlstm-350m"}
-_TRAIN_ARCHS = [
-    pytest.param(a, marks=pytest.mark.xfail(
-        strict=False,
-        reason="seed-era: optimization_barrier has no differentiation rule"))
-    if a in _BARRIER_XFAIL else a
-    for a in ARCH_NAMES]
+# The last seed-era xfail group is gone: transformer._barrier gives
+# optimization_barrier a custom JVP, so the remat-barrier archs' train
+# steps differentiate and every arch gates strictly.
+_TRAIN_ARCHS = list(ARCH_NAMES)
 
 
 def _batch(cfg, key=KEY):

@@ -7,6 +7,7 @@ ids.  The engine-level behavior these policies produce is covered by
 tests/test_serve.py and tests/test_serve_api.py."""
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.serve.pool import PagePool, kv_bytes_per_token, kv_page_bytes
 
@@ -169,6 +170,191 @@ def test_index_disabled_degrades_to_plain_allocator():
     assert pool.probe_prefix_len(_prompt(1, 2, 3, 4)) == 0
     pool.release(pages)
     assert pool.free_pages == 4 and pool.cached_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# Host tier: demotion keeps prefixes matchable, promotion brings them back
+
+
+def test_demotion_keeps_prefix_matchable():
+    pool = PagePool(2, 4, host_pages=4)
+    pages = _chain(pool, [1, 2, 3, 4, 5, 6, 7, 8])
+    pool.release(pages)
+    other = pool.alloc(2)  # pressure: both cached pages demote, not drop
+    assert pool.stats["demotions"] == 2 and pool.stats["evictions"] == 0
+    assert pool.host_cached_pages == 2 and pool.cached_pages == 0
+    # the trie still matches the full prefix, as encoded host ids
+    node, hit, matched, cow = pool.match_prefix(
+        _prompt(1, 2, 3, 4, 5, 6, 7, 8))
+    assert matched == 8 and all(pool.is_host(p) for p in hit)
+    assert pool.probe_prefix_split(_prompt(1, 2, 3, 4, 5, 6, 7, 8)) == (0, 8)
+    # chronological event log: leaf demoted first, each into a known slot
+    ev = pool.drain_events()
+    assert [e[0] for e in ev] == ["demote", "demote"]
+    assert {e[1] for e in ev} == set(pages)
+    assert pool.drain_events() == []  # drained
+    pool.release(other)
+
+
+def test_acquire_promotes_host_hits_back_to_device():
+    pool = PagePool(2, 4, host_pages=4)
+    pages = _chain(pool, [1, 2, 3, 4, 5, 6, 7, 8])
+    pool.release(pages)
+    pool.release(pool.alloc(2))  # demote both out...
+    pool.drain_events()
+    node, hit, matched, cow = pool.match_prefix(
+        _prompt(1, 2, 3, 4, 5, 6, 7, 8))
+    got = pool.acquire(hit)  # ...and a later hit promotes them back
+    assert len(got) == 2 and all(not pool.is_host(p) for p in got)
+    assert all(pool.ref(p) == 1 for p in got)
+    assert pool.stats["promotions"] == 2 and pool.host_cached_pages == 0
+    assert [e[0] for e in pool.drain_events()] == ["promote", "promote"]
+    # the promoted chain is a device-tier cache entry again
+    pool.release(got)
+    assert pool.probe_prefix_split(_prompt(1, 2, 3, 4, 5, 6, 7, 8)) == (8, 0)
+    assert pool.reclaimable_pages == pool.n_pages
+
+
+def test_device_region_stays_prefix_closed():
+    """Demotion picks the LRU node with no DEVICE children — a chain
+    demotes leaf-first, so every device page's ancestors are device pages
+    and a matched chain's host hits are a contiguous tail."""
+    pool = PagePool(3, 4, host_pages=4)
+    pages = _chain(pool, list(range(1, 13)))  # 3-page chain
+    pool.release(pages)
+    [p] = pool.alloc(1)  # one demotion: must be the chain's LEAF
+    node, hit, matched, _ = pool.match_prefix(_prompt(*range(1, 13)))
+    assert matched == 12
+    assert [pool.is_host(q) for q in hit] == [False, False, True]
+    assert pool.probe_prefix_split(_prompt(*range(1, 13))) == (8, 4)
+    pool.release([p])
+
+
+def test_host_tier_full_evicts_lru_host_page():
+    pool = PagePool(2, 4, host_pages=1)
+    a = _chain(pool, [1, 2, 3, 4])
+    pool.release(a)
+    b = pool.alloc(1)  # a demotes into the single host slot
+    b_node = pool.index_page(pool.root, (5, 6, 7, 8), b[0])
+    assert b_node is not None
+    pool.release(b)
+    pool.alloc(2)  # b needs the slot -> a is host-evicted
+    assert pool.stats["demotions"] == 2
+    assert pool.stats["host_evictions"] == 1
+    assert pool.host_cached_pages == 1
+    ev = pool.drain_events()
+    assert [e[0] for e in ev] == ["demote", "hevict", "demote"]
+    assert pool.probe_prefix_len(_prompt(1, 2, 3, 4)) == 0  # a is gone
+    assert pool.probe_prefix_len(_prompt(5, 6, 7, 8)) == 4  # b survives
+
+
+def test_untiered_pool_has_no_tier_traffic():
+    """host_pages=0 must behave exactly like the pre-tier pool: eviction
+    drops, nothing demotes, the event log stays empty."""
+    pool = PagePool(2, 4)
+    pages = _chain(pool, [1, 2, 3, 4, 5, 6, 7, 8])
+    pool.release(pages)
+    pool.alloc(2)
+    assert pool.stats["evictions"] == 2
+    assert pool.stats["demotions"] == 0 and pool.stats["promotions"] == 0
+    assert pool.events == [] and pool.host_cached_pages == 0
+    assert pool.probe_prefix_split(_prompt(1, 2, 3, 4)) == (0, 0)
+
+
+def test_available_ignores_encoded_host_ids():
+    """Encoded host ids in ``pinned`` are not device supply — promoting
+    them CONSUMES a device page, which admission prices as extra demand."""
+    pool = PagePool(2, 4, host_pages=2)
+    pages = _chain(pool, [1, 2, 3, 4])
+    pool.release(pages)
+    held = pool.alloc(2)  # demote the cached page
+    pool.release([held[0]])
+    _, hit, _, _ = pool.match_prefix(_prompt(1, 2, 3, 4))
+    assert [pool.is_host(p) for p in hit] == [True]
+    # 1 free device page; the host id must neither inflate nor (via the
+    # ref-0 discount meant for cached DEVICE pins) deflate the count
+    assert pool.available(hit) == 1
+    assert pool.available(hit + hit) == 1  # encoded ids dedup too
+
+
+def test_drop_cache_clears_both_tiers():
+    pool = PagePool(2, 4, host_pages=2)
+    pages = _chain(pool, [1, 2, 3, 4, 5, 6, 7, 8])
+    pool.release(pages)
+    pool.release(pool.alloc(2))  # both pages now host-resident
+    pool.drain_events()
+    assert pool.host_cached_pages == 2
+    pool.drop_cache()
+    assert pool.host_cached_pages == 0 and pool.cached_pages == 0
+    assert pool.free_pages == 2 and pool.host_free_slots == 2
+    assert [e[0] for e in pool.drain_events()] == ["hevict", "hevict"]
+
+
+@settings(deadline=None, max_examples=60)
+@given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 3),
+                              st.booleans()),
+                    min_size=1, max_size=40),
+       host_pages=st.integers(0, 3))
+def test_tiered_interleavings_never_leak(ops, host_pages):
+    """No-leak property across BOTH tiers: random admission/release traffic
+    over a pool smaller than the prefix working set (every (family, length,
+    release-first) triple drives match -> acquire -> alloc -> index ->
+    release, the engine's exact call sequence) keeps every page accounted
+    for in exactly one place, keeps host slots partitioned free/resident,
+    and keeps the event log consistent with a simulated host store."""
+    P = 4
+    pool = PagePool(4, P, host_pages=host_pages)
+    held, store = [], set()  # our chains; simulated engine host storage
+
+    def drain():
+        for ev in pool.drain_events():
+            if ev[0] == "demote":
+                assert ev[2] not in store  # never overwrites live bytes
+                store.add(ev[2])
+            else:  # promote / hevict both surrender the slot's bytes
+                assert ev[1] in store
+                store.discard(ev[1])
+
+    for fam, npages, release_first in ops:
+        if release_first and held:
+            pool.release(held.pop(0))
+        prompt = np.asarray([fam * 100 + i for i in range(npages * P)],
+                            np.int32)
+        node, pages, matched, _ = pool.match_prefix(prompt)
+        need = npages - len(pages)
+        n_host = sum(1 for p in pages if pool.is_host(p))
+        while need + n_host > pool.available(pages) and held:
+            pool.release(held.pop(0))
+        if need + n_host > pool.available(pages):
+            continue  # infeasible: engine would leave it queued
+        pages = pool.acquire(pages)
+        new = pool.alloc(need)
+        for j, p in enumerate(new):
+            key = tuple(int(t) for t in
+                        prompt[matched + j * P:matched + (j + 1) * P])
+            nxt = pool.index_page(node, key, p)
+            if nxt is None:
+                break
+            node = nxt
+        held.append(pages + new)
+        drain()
+        # every device page in exactly one place; host slots partitioned
+        tracked = set(pool._page_node) | {
+            p for p in range(pool.n_pages) if pool.ref(p) > 0}
+        assert tracked.isdisjoint(pool._free)
+        assert len(pool._free) + len(tracked) == pool.n_pages
+        assert sorted(pool._host_free + list(pool._host_node)) == list(
+            range(host_pages))
+        assert store == set(pool._host_node)
+    for chain in held:
+        pool.release(chain)
+    drain()
+    assert (pool._ref == 0).all()
+    assert pool.reclaimable_pages == pool.n_pages
+    pool.drop_cache()
+    drain()
+    assert pool.free_pages == pool.n_pages and not store
+    assert pool.host_free_slots == host_pages
 
 
 # ---------------------------------------------------------------------------

@@ -6,6 +6,8 @@ holding shared prefix pages — zero page leak, siblings unperturbed,
 property-based interleavings).  PagePool policies in isolation live in
 tests/test_pool.py; the pre-refactor engine behavior (which FIFO must
 reproduce bit-for-bit) in tests/test_serve.py."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,9 +18,9 @@ from repro.configs import get_config
 from repro.models import model as M
 from repro.serve.engine import ServeEngine
 from repro.serve.handle import Request, RequestHandle
-from repro.serve.scheduler import (EngineView, FifoScheduler,
-                                   PrefixAwareScheduler, Scheduler,
-                                   SloScheduler, make_scheduler)
+from repro.serve.scheduler import (ClassThenFamilyScheduler, EngineView,
+                                   FifoScheduler, PrefixAwareScheduler,
+                                   Scheduler, SloScheduler, make_scheduler)
 
 KEY = jax.random.PRNGKey(0)
 CACHE = 64
@@ -180,6 +182,74 @@ def test_slo_head_bypass_is_bounded():
         _view([head, _req(4, [4] * 8, priority=1)]))) == [0, 1]
 
 
+def test_class_then_family_partitions_then_groups():
+    """The composite policy: priority classes first (SLO's axis), family
+    grouping within each class (prefix-aware's axis), warm families first
+    within a class."""
+    s = ClassThenFamilyScheduler(depth=8)
+    A, B = [7, 7, 7, 7], [9, 9, 9, 9]
+    q = [_req(1, A + [1]),               # batch, family A
+         _req(2, B + [2]),               # batch, family B (cached)
+         _req(3, A + [3], priority=1),   # interactive, family A
+         _req(4, A + [4]),               # batch, family A
+         _req(5, B + [5], priority=1)]   # interactive, family B (cached)
+    order = list(s.admission_order(_view(q, cached=[B])))
+    # interactive class first (warm B before cold A), then batch likewise;
+    # members FIFO within their family
+    assert order == [4, 2, 1, 0, 3]
+    # beyond the window, order untouched
+    s2 = ClassThenFamilyScheduler(depth=2)
+    assert list(s2.admission_order(_view(q, cached=[B])))[2:] == [2, 3, 4]
+
+
+def test_class_then_family_is_tier_aware():
+    """With a tiered pool the view carries match_split: within one class,
+    device-warm families admit before host-warm before cold (a host hit
+    pays a promotion copy; a miss pays re-prefill)."""
+    D, H, C = [1, 1, 1, 1], [2, 2, 2, 2], [3, 3, 3, 3]
+    q = [_req(1, C + [1]), _req(2, H + [2]), _req(3, D + [3])]
+
+    def split(prompt):
+        head = tuple(int(t) for t in prompt[:4])
+        if head == tuple(D):
+            return 4, 0  # 4 device-resident tokens
+        if head == tuple(H):
+            return 0, 4  # 4 host-resident tokens
+        return 0, 0
+
+    v = EngineView(queue=tuple(q), slot_requests=(None, None),
+                   slot_fill=(0, 0), budget=32, chunk=16, page_size=4,
+                   match_len=lambda p: sum(split(p)), match_split=split)
+    s = ClassThenFamilyScheduler(depth=8)
+    assert list(s.admission_order(v)) == [2, 1, 0]
+    # without match_split the same view degrades to match_len warmth:
+    # device- and host-warm tie at 4 matched tokens, FIFO breaks the tie
+    v2 = dataclasses.replace(v, match_split=None)
+    assert list(ClassThenFamilyScheduler(depth=8).admission_order(v2)) \
+        == [1, 2, 0]
+
+
+def test_class_then_family_prefill_prefers_interactive():
+    s = ClassThenFamilyScheduler()
+    q = [_req(1, [1] * 8), _req(2, [2] * 8, priority=1)]
+    v = EngineView(queue=(), slot_requests=tuple(q), slot_fill=(0, 0),
+                   budget=32, chunk=16, page_size=4, match_len=lambda p: 0)
+    assert s.prefill_order(v, [0, 1]) == [1, 0]
+
+
+def test_class_then_family_head_bypass_is_bounded():
+    """The composite inherits the shared fairness backstop: a batch head
+    bypassed max_bypass times by interactive arrivals pins strict FIFO."""
+    s = ClassThenFamilyScheduler(max_bypass=2)
+    head = _req(1, [1] * 8)
+    assert list(s.admission_order(
+        _view([head, _req(2, [2] * 8, priority=1)])))[0] == 1
+    assert list(s.admission_order(
+        _view([head, _req(3, [3] * 8, priority=1)])))[0] == 1
+    assert list(s.admission_order(
+        _view([head, _req(4, [4] * 8, priority=1)]))) == [0, 1]
+
+
 def test_make_scheduler_resolution_and_validation():
     assert isinstance(make_scheduler(None), FifoScheduler)
     assert isinstance(make_scheduler("slo"), SloScheduler)
@@ -253,16 +323,16 @@ def test_engine_rejects_malformed_pack_order(qwen):
 
 
 def test_outputs_identical_across_policies(qwen):
-    """Greedy outputs depend only on the prompt: fifo, prefix-aware, and
-    slo must produce token-identical results on shared-prefix traffic with
-    mixed priorities — scheduling reorders work, never changes it."""
+    """Greedy outputs depend only on the prompt: every named policy must
+    produce token-identical results on shared-prefix traffic with mixed
+    priorities — scheduling reorders work, never changes it."""
     cfg, params = qwen
     [shared] = _prompts(cfg, [16], seed=90)
     prompts = ([np.concatenate([shared, s])
                 for s in _prompts(cfg, [4, 6], seed=91)]
                + _prompts(cfg, [7, 11], seed=92))
     outs = {}
-    for sched in ("fifo", "prefix-aware", "slo"):
+    for sched in ("fifo", "prefix-aware", "slo", "class-then-family"):
         eng = _engine(params, cfg, scheduler=sched)
         uids = [eng.submit(p, max_tokens=4, priority=i % 2)
                 for i, p in enumerate(prompts)]
@@ -271,7 +341,8 @@ def test_outputs_identical_across_policies(qwen):
         assert eng.stats["traces"] == 1
         assert eng.stats["scheduler"] == sched
         assert eng.reclaimable_pages == eng.n_pages
-    assert outs["fifo"] == outs["prefix-aware"] == outs["slo"]
+    assert (outs["fifo"] == outs["prefix-aware"] == outs["slo"]
+            == outs["class-then-family"])
     for out, p in zip(outs["fifo"], prompts):
         assert out == _solo_decode(params, cfg, p, 4)
 
@@ -536,6 +607,27 @@ def test_cancel_interleavings_never_leak_pages_meshed(qwen, ops):
     _drive_interleaving(fn._eng, cfg, ops)
 
 
+@settings(max_examples=5, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["submit", "tick", "cancel"]),
+                              st.integers(0, 7)),
+                    min_size=3, max_size=14))
+def test_cancel_interleavings_never_leak_pages_tiered(qwen, ops):
+    """The same no-leak property through a TIERED engine whose device pool
+    is smaller than the traffic's working set, so interleavings demote,
+    promote, and host-evict continuously — plus the cross-tier invariant:
+    the engine's host byte store mirrors the pool's host residency exactly,
+    and host slots stay partitioned free/resident."""
+    cfg, params = qwen
+    fn = test_cancel_interleavings_never_leak_pages_tiered
+    if not hasattr(fn, "_eng"):
+        fn._eng = _engine(params, cfg, max_pages=6, host_pages=4)
+    eng = fn._eng
+    _drive_interleaving(eng, cfg, ops)
+    assert set(eng._host_store) == set(eng.pool._host_node)
+    assert sorted(eng.pool._host_free + list(eng.pool._host_node)) == list(
+        range(eng.host_pages))
+
+
 # ---------------------------------------------------------------------------
 # Tuned config carries the scheduler axis
 
@@ -544,8 +636,31 @@ def test_select_serve_defaults_tunes_scheduler():
     from repro.core.autotune import select_serve_defaults
 
     out = select_serve_defaults("qwen2-1.5b", smoke=True, context_len=100)
-    assert out["best"]["scheduler"] in ("fifo", "prefix-aware", "slo")
+    assert out["best"]["scheduler"] in ("fifo", "prefix-aware", "slo",
+                                        "class-then-family")
     assert all("scheduler" in r for r in out["table"])
+    assert out["best"]["host_pool_pages"] == 0  # default axis is untiered
     only = select_serve_defaults("qwen2-1.5b", smoke=True, context_len=100,
                                  schedulers=("prefix-aware",))
     assert only["best"]["scheduler"] == "prefix-aware"
+
+
+def test_select_serve_defaults_host_pool_axis():
+    """A nonzero host_pool_pages axis adds the spill@replay criterion and
+    the tiered point wins it: warm-replay decode priced at promotion
+    bandwidth beats re-prefilling the spilled prefix from scratch."""
+    from repro.core.autotune import select_serve_defaults
+
+    out = select_serve_defaults("qwen2-1.5b", smoke=True, context_len=100,
+                                host_pool_pages=(0, 64))
+    assert out["best"]["host_pool_pages"] == 64
+    assert all("spill@replay" in r["criteria"] for r in out["table"])
+    tiered = {r["host_pool_pages"]: r["criteria"]["spill@replay"]
+              for r in out["table"]
+              if r["scheduler"] == out["best"]["scheduler"]
+              and r["token_budget"] == out["best"]["token_budget"]
+              and r["page_size"] == out["best"]["page_size"]
+              and r["kv_dtype"] == out["best"]["kv_dtype"]
+              and r["n_devices"] == out["best"]["n_devices"]
+              and r["prefill_chunk"] == out["best"]["prefill_chunk"]}
+    assert tiered[64] > tiered[0]

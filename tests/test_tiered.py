@@ -1,0 +1,187 @@
+"""Tiered KV cache — engine-level tests for the host-RAM second tier.
+
+The paper's cache-mode result, applied to serving: the device pool is the
+fast tier, ``host_pages=`` adds a host-RAM tier that catches what pressure
+evicts.  These tests drive a device pool sized BELOW the prefix working set
+(three 3-page families through a 6-page pool) so warm replay without the
+tier re-prefills from scratch, and assert the tiered contract end to end:
+
+- demotion keeps evicted prefixes matchable; a warm replay hits the HOST
+  tier and promotes instead of re-prefilling (``host_hits`` between the
+  warm ``prefix_hits`` and the cold miss);
+- transcripts stay token-identical to the untiered engine and to solo
+  decode — for float32 AND int8 pools (scale rows ride through the
+  demote-gather / promote-scatter round trip);
+- the serve path still traces exactly ONE program (movers are control
+  plane);
+- cross-tier hygiene: refcounts drain to zero, the engine's host byte
+  store tracks the pool's host residency exactly, and dropping the cache
+  empties both tiers.
+
+Pool-level tier policies in isolation: tests/test_pool.py.  Scheduler
+tier-awareness: tests/test_serve_api.py."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve.engine import ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+CACHE = 64
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    # float32 keeps greedy argmax stable across batching layouts
+    cfg = get_config("qwen2-1.5b", smoke=True).replace(dtype="float32")
+    params = M.init_params(KEY, cfg)
+    return cfg, params
+
+
+def _families(cfg, n=3, pages=3, page_size=8, seed=40):
+    """n prompts of ``pages`` full pages each — a prefix working set of
+    n * pages pages, to be pushed through a device pool smaller than that."""
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, pages * page_size)
+            for _ in range(n)]
+
+
+def _engine(params, cfg, **kw):
+    # device pool (6 pages) below the working set (3 families x 3 pages +
+    # a generated page each): every admission evicts someone else's prefix
+    kw.setdefault("batch_size", 1)
+    kw.setdefault("cache_len", CACHE)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 16)
+    kw.setdefault("token_budget", 32)
+    kw.setdefault("max_pages", 6)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _wave(eng, prompts, max_tokens=4):
+    uids = [eng.submit(p, max_tokens=max_tokens) for p in prompts]
+    got = eng.run()
+    return [got[u] for u in uids]
+
+
+def _solo_decode(params, cfg, prompt, max_tokens, cache_len=CACHE):
+    import jax.numpy as jnp
+
+    state = M.init_decode_state(params, cfg, 1, cache_len)
+    state = M.prefill(params, cfg, state, np.asarray(prompt, np.int32)[None])
+    t = jnp.asarray([[int(prompt[-1])]], jnp.int32)
+    out = []
+    for _ in range(max_tokens):
+        logits, state = M.decode_step(params, cfg, state, t)
+        tok = int(jnp.argmax(logits[:, -1], -1)[0])
+        out.append(tok)
+        t = jnp.asarray([[tok]], jnp.int32)
+    return out
+
+
+def _assert_cross_tier_hygiene(eng):
+    """Every page accounted for, engine host bytes == pool host residency,
+    host slots partitioned free/resident."""
+    assert (eng._ref == 0).all()
+    assert eng.reclaimable_pages == eng.n_pages
+    assert set(eng._host_store) == set(eng.pool._host_node)
+    assert sorted(eng.pool._host_free + list(eng.pool._host_node)) == list(
+        range(eng.host_pages))
+
+
+# ---------------------------------------------------------------------------
+# The headline: warm replay hits the host tier instead of re-prefilling
+
+
+def test_warm_replay_promotes_instead_of_reprefilling(qwen):
+    cfg, params = qwen
+    fams = _families(cfg)
+
+    cold = _engine(params, cfg, host_pages=0)
+    cold1, cold2 = _wave(cold, fams), _wave(cold, fams)
+    # untiered, the 9-page working set churns straight through the 6-page
+    # pool: the replay wave finds nothing cached
+    assert cold.stats["host_hits"] == 0 and cold.stats["demotions"] == 0
+    replay_hits = cold.stats["prefix_hits"]
+
+    warm = _engine(params, cfg, host_pages=16)
+    warm1, warm2 = _wave(warm, fams), _wave(warm, fams)
+    # tiered, eviction DEMOTED those prefixes, so every replayed family is
+    # a host hit promoted back — no prefix is ever re-prefilled
+    assert warm.stats["demotions"] > 0
+    assert warm.stats["host_hits"] == len(fams)
+    assert warm.stats["host_pages_promoted"] >= len(fams)
+    assert warm.stats["prefix_hits"] > replay_hits
+    assert warm.stats["evictions"] == 0  # the tier caught every eviction
+
+    # transcripts are token-identical: tiering moves bytes, never changes
+    # them — and the serve path is still exactly one compiled program
+    assert warm1 == cold1 and warm2 == cold2 and warm1 == warm2
+    for out, p in zip(warm1, fams):
+        assert out == _solo_decode(params, cfg, p, 4)
+    assert warm.stats["traces"] == 1
+    _assert_cross_tier_hygiene(warm)
+
+
+def test_int8_scales_survive_promotion_roundtrip(qwen):
+    """int8 pools store per-entry scale rows next to the quantized values;
+    the demote gather and promote scatter must carry BOTH, or a promoted
+    page dequantizes garbage.  Identical cold/warm transcripts through an
+    int8 tiered engine prove the full round trip."""
+    cfg, params = qwen
+    fams = _families(cfg, seed=41)
+    cold = _engine(params, cfg, host_pages=0, kv_dtype="int8")
+    warm = _engine(params, cfg, host_pages=16, kv_dtype="int8")
+    cold1, cold2 = _wave(cold, fams), _wave(cold, fams)
+    warm1, warm2 = _wave(warm, fams), _wave(warm, fams)
+    assert warm.stats["host_hits"] == len(fams)
+    assert warm1 == cold1 and warm2 == cold2 and warm1 == warm2
+    _assert_cross_tier_hygiene(warm)
+
+
+def test_host_tier_capacity_bounds_residency(qwen):
+    """A host tier smaller than the spill set hevicts LRU: residency never
+    exceeds host_pages and the engine's byte store shrinks in lockstep."""
+    cfg, params = qwen
+    eng = _engine(params, cfg, host_pages=2)
+    fams = _families(cfg, seed=42)
+    _wave(eng, fams)
+    assert eng.stats["host_evictions"] > 0
+    assert eng.pool.host_cached_pages <= 2
+    assert len(eng._host_store) <= 2
+    _assert_cross_tier_hygiene(eng)
+
+
+# ---------------------------------------------------------------------------
+# Hygiene: the 3-wave regression, extended across tiers
+
+
+def test_tiered_pool_returns_to_initial_after_three_waves(qwen):
+    """The PR 3 pool-hygiene regression through a TIERED engine: three
+    admit/retire waves under demotion pressure, cross-tier invariants after
+    every wave, and a final drop that empties both tiers and the engine's
+    host byte store."""
+    cfg, params = qwen
+    eng = _engine(params, cfg, host_pages=8)
+    assert len(eng._free) == eng.n_pages
+    for wave in range(3):
+        prompts = _families(cfg, seed=43 + wave)
+        outs = _wave(eng, prompts, max_tokens=3)
+        assert all(len(o) == 3 for o in outs)
+        assert not any(eng.slots)
+        _assert_cross_tier_hygiene(eng)
+    assert eng.stats["demotions"] > 0  # the waves actually exercised tiers
+    # wave 4: a cancellation mid-flight must not perturb tier bookkeeping
+    prompts = _families(cfg, seed=46)
+    handles = [eng.submit(p, max_tokens=4) for p in prompts]
+    eng.tick()
+    assert handles[1].cancel()
+    eng.run()
+    _assert_cross_tier_hygiene(eng)
+    # dropping the cache clears BOTH tiers and the host byte store
+    eng.drop_prefix_cache()
+    assert len(eng._free) == eng.n_pages and eng.cached_pages == 0
+    assert eng.pool.host_cached_pages == 0 and not eng._host_store
+    assert eng.pool.host_free_slots == eng.host_pages
