@@ -33,6 +33,15 @@ analogue sweeps (concurrent users × prompt-length mix × page size) through
   device/host/miss admission split, pages promoted, and the token-identity
   check (tiering moves bytes, never changes them).  ``--tiered-only`` runs
   just this scenario (the CI tiered-smoke job).
+- **speculative decoding A/B (spec-off vs prompt-lookup drafts)** — the
+  repetitive code/doc-completion workload: tiled-pattern prompts whose
+  greedy continuations the n-gram drafter predicts almost perfectly, so
+  the spec-on arm verifies ``spec_k`` draft tokens per decoding slot in
+  the same one-trace (T,) pack and emits >1 accepted token per slot-tick.
+  Reports per arm tokens/s + the draft ledger, ``accepted_per_tick``,
+  token-identity of greedy transcripts (verification is exact), and the
+  page-leak gate after a cancel-mid-draft wave.  ``--spec-only`` runs just
+  this scenario (the CI spec-smoke job).
 - **fp32-vs-int8 KV pool A/B at a fixed page-pool BYTE budget** — the
   quantized-working-set experiment: both arms get the same pool bytes, so
   the int8 arm holds 2-4× the resident pages and admits more concurrent
@@ -452,6 +461,117 @@ def tiered_kv_scenario(cfg, params, *, page_size: int = 8,
             "token_identical": bool(identical)}
 
 
+def speculative_scenario(cfg, params, *, batch_size: int = 4,
+                         page_size: int = 8, spec_k: int = 6,
+                         pattern_len: int = 6, reps: int = 8,
+                         max_tokens: int = 48, seed: int = 31,
+                         warm: bool = True):
+    """Speculative decoding A/B on the repetitive code/doc-completion
+    workload — the prompt-lookup drafter's home turf.
+
+    Traffic: ``batch_size`` prompts, each a short token pattern tiled
+    ``reps`` times (the structure of boilerplate code or templated docs).
+    A greedy model decoding such a prompt settles into a loop the n-gram
+    drafter predicts almost perfectly, so the spec-on arm packs ``spec_k``
+    draft tokens per decoding slot into the SAME (T,) budget and accepts
+    most of them — more than one emitted token per slot-tick through one
+    forward pass per tick, with zero extra traces.
+
+    Reports per arm: tokens/s (best-of-3 warm), ticks, traces, and for the
+    spec arm the draft ledger (drafted/accepted/rejected/rollbacks) plus
+    ``accepted_per_tick`` — mean emitted tokens per (request, tick) pair
+    computed from the measured segment of ``token_log`` (the >1 gate);
+    ``speedup`` (spec-on over spec-off tokens/s), ``token_identical``
+    (greedy transcripts must match exactly — verification is exact), and
+    ``page_leak_free`` after a cancel-mid-draft wave (half the requests
+    cancelled while draft chains are in flight, then a full drain)."""
+    rng = np.random.RandomState(seed)
+    prompts = [np.tile(rng.randint(0, cfg.vocab_size, pattern_len), reps)
+               for _ in range(batch_size)]
+    prompt_len = pattern_len * reps
+    cache_len = prompt_len + max_tokens + 2 * page_size
+
+    out = {}
+    outputs = {}
+    for mode, k in (("spec-off", 0), ("spec-on", spec_k)):
+        eng = ServeEngine(params, cfg, batch_size=batch_size,
+                          cache_len=cache_len, page_size=page_size,
+                          prefill_chunk=16,
+                          token_budget=batch_size * (1 + spec_k) + 16,
+                          spec_k=k)
+
+        def drive():
+            uids = [eng.submit(p, max_tokens=max_tokens) for p in prompts]
+            log0 = len(eng.token_log)
+            t0 = time.perf_counter()
+            results = eng.run()
+            dt = time.perf_counter() - t0
+            n_tok = sum(len(results[u]) for u in uids)
+            assert all(len(results[u]) == max_tokens for u in uids)
+            slot_ticks = {(uid, tick)
+                          for uid, tick, _ in eng.token_log[log0:]}
+            return (n_tok / dt, [results[u] for u in uids],
+                    n_tok / max(len(slot_ticks), 1))
+        if warm:  # compile every program (rollback included), then re-time
+            drive()
+        before = dict(eng.stats)
+        tps, toks, acc_tick = drive()
+        delta = {s: eng.stats[s] - before[s]
+                 for s in ("ticks", "spec_drafted", "spec_accepted",
+                           "spec_rejected", "spec_rollbacks")}
+        outputs[mode] = toks
+        for _ in range(2):  # best-of-3 damps wall-clock noise
+            t2, r2, _ = drive()
+            assert r2 == toks
+            tps = max(tps, t2)
+        # cancel-mid-draft wave: half the requests die while draft chains
+        # are in flight; the drain must hand every page back
+        handles = [eng.submit(p, max_tokens=max_tokens) for p in prompts]
+        for _ in range(3):
+            eng.tick()
+        for h in handles[::2]:
+            h.cancel()
+        eng.run()
+        leak_free = bool((eng._ref == 0).all()
+                         and eng.reclaimable_pages == eng.n_pages)
+        out[mode] = {
+            "tokens_per_s": tps,
+            "spec_k": k,
+            "ticks": delta["ticks"],
+            "accepted_per_tick": acc_tick,
+            "drafted": delta["spec_drafted"],
+            "accepted": delta["spec_accepted"],
+            "rejected": delta["spec_rejected"],
+            "rollbacks": delta["spec_rollbacks"],
+            "page_leak_free": leak_free,
+            "traces": eng.stats["traces"],
+        }
+    return {**out,
+            "speedup": (out["spec-on"]["tokens_per_s"]
+                        / out["spec-off"]["tokens_per_s"]),
+            "accepted_per_tick": out["spec-on"]["accepted_per_tick"],
+            "token_identical": bool(outputs["spec-on"]
+                                    == outputs["spec-off"]),
+            "page_leak_free": bool(out["spec-on"]["page_leak_free"]
+                                   and out["spec-off"]["page_leak_free"])}
+
+
+def _spec_rows(arch, spec):
+    rows = []
+    for mode in ("spec-off", "spec-on"):
+        r = spec[mode]
+        rows.append((f"serve/{arch}/speculative/{mode}", r["tokens_per_s"],
+                     f"spec_k={r['spec_k']},ticks={r['ticks']},"
+                     f"accepted_per_tick={r['accepted_per_tick']:.2f},"
+                     f"accepted={r['accepted']},rejected={r['rejected']}"))
+    rows.append((f"serve/{arch}/speculative/speedup", spec["speedup"],
+                 f"x-over-spec-off,"
+                 f"accepted_per_tick={spec['accepted_per_tick']:.2f},"
+                 f"token_identical={str(spec['token_identical']).lower()},"
+                 f"page_leak_free={str(spec['page_leak_free']).lower()}"))
+    return rows
+
+
 def _tiered_rows(arch, tiered):
     rows = []
     for mode in ("drop-on-evict", "host-tier"):
@@ -764,6 +884,8 @@ def sweep(arch: str, users, page_sizes, max_tokens: int, cache_len: int,
                  "x-fifo-p50-interactive-latency"))
     tiered = tiered_kv_scenario(cfg, params, warm=warm)
     rows += _tiered_rows(arch, tiered)
+    spec = speculative_scenario(cfg, params, warm=warm)
+    rows += _spec_rows(arch, spec)
     kv_ab = kv_ab_scenario(cfg, params, warm=warm)
     for p in kv_ab["points"]:
         for arm in ("fp32", "int8"):
@@ -778,7 +900,7 @@ def sweep(arch: str, users, page_sizes, max_tokens: int, cache_len: int,
             f"/max_tokens={p['max_tokens']}", p["speedup"],
             f"x-int8-over-fp32-at-equal-bytes,"
             f"top1_agreement={p['top1_agreement']:.3f}"))
-    return rows, lat, pre, kv_ab, sched_ab, tiered
+    return rows, lat, pre, kv_ab, sched_ab, tiered, spec
 
 
 def main(argv=None):
@@ -802,6 +924,10 @@ def main(argv=None):
     ap.add_argument("--tiered-only", action="store_true",
                     help="skip the main sweep; run only the tiered KV "
                          "cache A/B (drop-on-evict vs host-tier replay)")
+    ap.add_argument("--spec-only", action="store_true",
+                    help="skip the main sweep; run only the speculative "
+                         "decoding A/B (spec-off vs spec-on on the "
+                         "repetitive completion workload)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + latency results as JSON")
     args = ap.parse_args(argv)
@@ -809,15 +935,20 @@ def main(argv=None):
         args.users, args.page_sizes, args.max_tokens = [4], [8], 4
     if args.sharded_only:
         args.sharded = True
-    rows, lat, pre, kv_ab, sched_ab, tiered = (
-        [], None, None, None, None, None)
+    rows, lat, pre, kv_ab, sched_ab, tiered, spec = (
+        [], None, None, None, None, None, None)
     if args.tiered_only:
         cfg = get_config(args.arch, smoke=True)
         params = M.init_params(jax.random.PRNGKey(0), cfg)
         tiered = tiered_kv_scenario(cfg, params, warm=not args.cold)
         rows = _tiered_rows(args.arch, tiered)
+    elif args.spec_only:
+        cfg = get_config(args.arch, smoke=True)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        spec = speculative_scenario(cfg, params, warm=not args.cold)
+        rows = _spec_rows(args.arch, spec)
     elif not args.sharded_only:
-        rows, lat, pre, kv_ab, sched_ab, tiered = sweep(
+        rows, lat, pre, kv_ab, sched_ab, tiered, spec = sweep(
             args.arch, args.users, args.page_sizes, args.max_tokens,
             args.cache_len, baseline=not args.no_baseline, warm=not args.cold)
     sharded = None
@@ -853,10 +984,13 @@ def main(argv=None):
             "kv_dtype_ab": kv_ab,
             "scheduler_ab": sched_ab,
             "tiered_kv": tiered,
-            # host_pool_pages axis included: the tuner prices the tiered
-            # point's promotion traffic against untiered re-prefill
+            "speculative": spec,
+            # host_pool_pages axis prices the tiered point's promotion
+            # traffic against untiered re-prefill; the spec_ks axis prices
+            # draft-token goodput on the repetitive decode point
             "tuned_serving_config": select_serve_defaults(
-                args.arch, smoke=True, host_pool_pages=(0, 64))["best"],
+                args.arch, smoke=True, host_pool_pages=(0, 64),
+                spec_ks=(0, 4))["best"],
         }
         if sharded is not None:
             payload["sharded_serve"] = sharded

@@ -120,6 +120,7 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
                                       "class-then-family"),
                           device_counts=(1,),
                           host_pool_pages=(0,),
+                          spec_ks=(0,), spec_accept_rate: float = 0.6,
                           shared_frac: float = 0.75, gen_tokens: int = 32,
                           hw: HwSpec = V5E, smoke: bool = False) -> Dict:
     """Emit ONE tuned serving config for ``serve.ServeEngine``.
@@ -182,6 +183,20 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
     ``mixed_bound(promoted_pages=...)`` against ``hw.h2d_bw``, overlapped
     with decode, so the request costs only its ``G`` decode ticks at the
     (possibly promotion-roofed) tick time.  The default ``(0,)`` skips the
+    criterion entirely: the existing selection is bit-identical.
+
+    ``spec_ks`` adds the SPECULATIVE-DECODING axis (ServeEngine
+    ``spec_k=`` / ``serve.scheduler.SpeculativeScheduler``).  When a
+    nonzero k is on the axis, every candidate is additionally scored on
+    ``spec@repetitive``: accepted-token goodput on repetitive decode-heavy
+    traffic (the prompt-lookup drafter's home turf), priced by
+    ``mixed_bound(draft_tokens=, accept_rate=spec_accept_rate)`` — draft
+    rows pay compute and KV writes but share the slot's KV page-stream, so
+    on memory-dominated ticks acceptance is nearly free throughput.  The
+    effective k is capped by the leftover budget per decoding slot
+    (``(token_budget - batch) // batch`` — the engine packs drafts strictly
+    after decode and prefill), so the axis pulls TOWARD bigger budgets in a
+    way the other criteria must balance.  The default ``(0,)`` skips the
     criterion entirely: the existing selection is bit-identical.
     """
     from repro.configs import get_config
@@ -262,8 +277,30 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
                             prefill_ticks = -(-S // chunk_eff)
                             spill[h] = dec / ((prefill_ticks + G)
                                               * blend_tick_s)
-                    for sched, h in ((s, h) for s in schedulers
-                                     for h in host_pool_pages):
+                    # speculative axis: accepted-token goodput on repetitive
+                    # decode-heavy traffic.  Scheduler-independent (the
+                    # drafter rides on top of any ordering policy), so
+                    # computed once per (knobs, k).
+                    spec_on = any(k > 0 for k in spec_ks)
+                    spec = {}
+                    for sk in spec_ks:
+                        if not spec_on:
+                            continue
+                        dec = min(batch_size, tb)
+                        # drafts pack only in the budget left after every
+                        # decoding slot's base token — the engine's strict
+                        # decode-first priority caps k per slot
+                        k_eff = min(int(sk), max(tb - dec, 0) // max(dec, 1))
+                        rs = mixed_bound(
+                            cfg, n_decode=dec, n_prefill=0,
+                            context_len=context_len, hw=hw, page_size=ps,
+                            kv_dtype=kvd, n_devices=ndev,
+                            draft_tokens=float(k_eff),
+                            accept_rate=spec_accept_rate if k_eff else 0.0)
+                        spec[sk] = rs["tokens_per_s"]
+                    for sched, h, sk in ((s, h, sk) for s in schedulers
+                                         for h in host_pool_pages
+                                         for sk in spec_ks):
                         model = SCHEDULER_MODEL[sched]
                         hit = shared_frac * model["residency"]
                         # pack tokens a warm-family request still costs vs
@@ -281,10 +318,12 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
                             * (1 + model["interactive_wait"] * prefill_ticks))
                         if tier_on:
                             crit["spill@replay"] = spill[h]
+                        if spec_on:
+                            crit["spec@repetitive"] = spec[sk]
                         rows.append({"token_budget": tb, "prefill_chunk": pc,
                                      "page_size": ps, "kv_dtype": kvd,
                                      "scheduler": sched, "n_devices": ndev,
-                                     "host_pool_pages": h,
+                                     "host_pool_pages": h, "spec_k": sk,
                                      "criteria": crit})
     if not rows:
         raise ValueError("no valid (token_budget, prefill_chunk, page_size, "
@@ -301,6 +340,6 @@ def select_serve_defaults(arch: str, *, batch_size: int = 8,
     return {"best": {k: best[k] for k in ("token_budget", "prefill_chunk",
                                           "page_size", "kv_dtype",
                                           "scheduler", "n_devices",
-                                          "host_pool_pages", "score",
-                                          "mean_fraction")},
+                                          "host_pool_pages", "spec_k",
+                                          "score", "mean_fraction")},
             "table": rows}

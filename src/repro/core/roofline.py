@@ -181,7 +181,9 @@ def decode_bound(cfg, batch: int, context_len: int, hw: HwSpec = V5E,
 def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
                 hw: HwSpec = V5E, page_size: int = None,
                 kv_dtype=None, n_devices: int = 1,
-                promoted_pages: float = 0.0) -> Dict:
+                promoted_pages: float = 0.0,
+                draft_tokens: float = 0.0,
+                accept_rate: float = 0.0) -> Dict:
     """Analytic bound for ONE ragged tick — the decode/prefill roofline blend.
 
     Scores a pack of ``n_decode`` decode tokens + ``n_prefill`` prefill-chunk
@@ -222,14 +224,34 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
     the term is priced against is re-prefilling the same tokens, which
     pays compute AND pool writes — a host hit wins whenever
     ``promotion_s`` is below the re-prefill tick it replaces.
+
+    ``draft_tokens`` / ``accept_rate`` price SPECULATIVE decoding
+    (``ServeEngine(spec_k=...)``): ``draft_tokens`` verify tokens ride
+    along per decoding slot, of which ``accept_rate`` are expected to be
+    accepted.  The asymmetry this model exists to show: a verify token
+    pays full compute (a query over the slot's whole context, plus its
+    share of the parameter matmuls) and writes its KV row, but adds
+    NOTHING to the KV read side — the slot's page-stream is already being
+    read for its base decode token, and the verify rows share it.  Since
+    small-batch decode ticks are memory-bound on exactly that page-stream
+    (plus the parameter sweep), verify tokens are near-free until the
+    added compute reaches the memory roof — which is why the bound's
+    ``tokens_per_s`` (EMITTED tokens: ``n_decode · (1 + accept_rate ·
+    draft_tokens) + n_prefill`` per tick) grows almost linearly in the
+    accepted depth.  Defaults (0, 0) reproduce the non-speculative bound
+    bit for bit.
     """
+    if not 0.0 <= accept_rate <= 1.0:
+        raise ValueError(f"accept_rate must be in [0, 1], got {accept_rate}")
+    if draft_tokens < 0:
+        raise ValueError(f"draft_tokens must be >= 0, got {draft_tokens}")
     n_act = active_param_count(cfg)
     param_bytes = n_act * (2 if cfg.param_dtype == "bfloat16" else 4)
     act_bytes = 2 if cfg.dtype == "bfloat16" else 4
-    total = n_decode + n_prefill
+    total = (n_decode * (1.0 + accept_rate * draft_tokens)) + n_prefill
 
-    def _tick(n_dec, n_pre):
-        toks = n_dec + n_pre
+    def _tick(n_dec, n_pre, n_draft=0.0):
+        toks = n_dec + n_pre + n_draft
         flops = 2.0 * n_act * toks
         kv_read = kv_write = 0.0
         for st in cfg.stages:
@@ -246,12 +268,17 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
                     eb = _kv_elem_bytes(kv_dtype, a.head_dim, act_bytes)
                 shards = (n_devices if a.window is None
                           and a.num_kv_heads % n_devices == 0 else 1)
-                # decode tokens see the whole context; prefill tokens see
-                # ~half of it on average (causal positions 0..ctx)
-                q_ctx = n_dec * t_eff + n_pre * t_eff / 2.0
+                # decode AND draft tokens see the whole context; prefill
+                # tokens see ~half of it on average (causal positions
+                # 0..ctx).  COMPUTE scales with every query token...
+                q_ctx = (n_dec + n_draft) * t_eff + n_pre * t_eff / 2.0
+                # ...but the KV READ stream does not scale with drafts:
+                # verify rows share the page-stream their slot's base
+                # decode token already reads (the near-free-verify claim)
+                q_ctx_read = n_dec * t_eff + n_pre * t_eff / 2.0
                 flops += (st.repeats * 4.0 * q_ctx * a.num_heads
                           * a.head_dim / shards)
-                kv_read += (st.repeats * 2.0 * q_ctx * a.num_kv_heads
+                kv_read += (st.repeats * 2.0 * q_ctx_read * a.num_kv_heads
                             * a.head_dim * eb / shards)
                 kv_write += (st.repeats * 2.0 * toks * a.num_kv_heads
                              * a.head_dim * eb / shards)
@@ -259,7 +286,8 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
         t_mem = (param_bytes + kv_read + kv_write) / hw.hbm_bw
         return t_comp, t_mem, max(t_comp, t_mem, 1e-30), kv_read, kv_write
 
-    t_comp, t_mem, t, kv_read, kv_write = _tick(n_decode, n_prefill)
+    t_comp, t_mem, t, kv_read, kv_write = _tick(
+        n_decode, n_prefill, n_decode * draft_tokens)
     # promotion term: pages/tick crossing the host->device link, overlapped
     # with the tick's compute (issued at admission) — a third roof, not an
     # added cost
@@ -296,7 +324,11 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
         "kv_read_bytes": kv_read,
         "kv_write_bytes": kv_write,
         "tick_s": t,
+        # EMITTED tokens per second: with speculation each decode slot
+        # lands 1 + accept_rate·draft_tokens accepted tokens per tick
         "tokens_per_s": total / t if total else 0.0,
+        "accepted_per_slot_tick": 1.0 + accept_rate * draft_tokens,
+        "drafted_tokens": n_decode * draft_tokens,
         "speedup_vs_two_phase": two_phase / t,
     }
 

@@ -210,7 +210,12 @@ def ragged_step(params, cfg: ModelCfg, state, tokens, slot, q_pos, seq_idx,
 
     logit_idx: (B,) index into the pack of each slot's sampled token (T ==
     no sample this tick; those rows return garbage logits the engine
-    ignores).  Returns (logits (B, V), new state).
+    ignores).  Returns (logits (B, V), new state).  A speculative engine
+    passes (B, R) instead — row 0 is the slot's base decode token and rows
+    1..R-1 its packed draft tokens — and gets (B, R, V) back: one forward
+    verifies the whole draft chain, the engine samples row j to check
+    draft j.  Unused rows carry T like the 1-D case.  The shape is fixed
+    per engine, so either way there is exactly one compiled program.
 
     Callers must jit this with the state donated
     (``serve_step.STATE_DONATE_ARGNUM``): the KV page pools (and, for int8
@@ -229,13 +234,18 @@ def ragged_step(params, cfg: ModelCfg, state, tokens, slot, q_pos, seq_idx,
                                       flash_decode=flash_decode)
         new_layers.append(ns)
     # gather only the sampled tokens before the LM head: the pack is T wide
-    # but at most B slots sample per tick, so the head runs at (B, V)
-    sel = jnp.take(x[0], jnp.minimum(logit_idx, x.shape[1] - 1), axis=0)
+    # but at most B slots (times R verify rows) sample per tick, so the
+    # head runs at (B, V) / (B*R, V) instead of (T, V)
+    flat_idx = logit_idx.reshape(-1)
+    sel = jnp.take(x[0], jnp.minimum(flat_idx, x.shape[1] - 1), axis=0)
     sel = rmsnorm(params["final_norm"], sel[:, None, :], cfg.norm_eps)
     tied = params["embed"]["tok_embed"] if cfg.tie_embeddings else None
     logits = emb.logits_from_hidden(params.get("head", {}), sel,
                                     tied_embed=tied)
-    return logits[:, 0], {"layers": new_layers}
+    logits = logits[:, 0]
+    if logit_idx.ndim == 2:
+        logits = logits.reshape(logit_idx.shape + logits.shape[-1:])
+    return logits, {"layers": new_layers}
 
 
 def reset_paged_slots(cfg: ModelCfg, state, init_state, mask, ptab_rows,
@@ -251,6 +261,29 @@ def reset_paged_slots(cfg: ModelCfg, state, init_state, mask, ptab_rows,
                                         prefix_len)
                   for st, ss, is0 in zip(cfg.stages, state["layers"],
                                          init_state["layers"])]
+    return {"layers": new_layers}
+
+
+def rollback_paged_slots(cfg: ModelCfg, state, mask, new_len) -> Dict:
+    """Speculative rejection: for slots where ``mask`` is set, invalidate
+    every written KV row at positions >= ``new_len`` (the slot's next write
+    position after accepting the agreeing draft prefix) by resetting its
+    ``kpos`` entry to -1 and clamping ``slen``.
+
+    Only per-slot position metadata moves — the K/V pools themselves (and
+    int8 scale rows) are untouched, so shared COW prefix pages and their
+    scales can never be corrupted by a rejected draft tail: drafts only
+    ever write beyond the prompt, into pages the slot privately owns (see
+    ``serve.pool``).  ``kpos`` stores absolute positions, so the rejected
+    tail is exactly the entries holding a value >= new_len; the stale K/V
+    bytes they pointed at stay dead until the next tick's scatter
+    overwrites them (writes always precede attention within a tick).
+
+    mask: (B,) bool; new_len: (B,) int32.  One trace per engine — the
+    engine jits this donated and dispatches it only on ticks that actually
+    rejected drafts."""
+    new_layers = [tfm.rollback_stage_slots(st, ss, mask, new_len)
+                  for st, ss in zip(cfg.stages, state["layers"])]
     return {"layers": new_layers}
 
 

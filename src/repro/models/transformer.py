@@ -473,6 +473,34 @@ def reset_stage_slots(stage: Stage, states, init_states, mask, ptab_rows,
     return out
 
 
+def rollback_stage_slots(stage: Stage, states, mask, new_len):
+    """Speculative rejection: for masked slots, kill the position metadata
+    of every KV row written past ``new_len`` — ``kpos`` entries holding a
+    value >= new_len drop to -1 (unwritten) and ``slen`` clamps down.  KV
+    pools, scale pools, block tables and recurrent/windowed state all pass
+    through untouched: rejected draft bytes stay in their pages, dead via
+    kpos, until the next tick's scatter overwrites them.  The value-based
+    test (rather than cache-index iota) works because ``kpos`` stores
+    absolute positions wherever they land.  mask: (B,), new_len: (B,)."""
+    lead = 1 if stage.repeats > 1 else 0
+    out = []
+    for s_blk in states:
+        new = {}
+        for name, leaf in s_blk.items():
+            if name == "kpos":
+                m = mask.reshape((1,) * lead + (-1,) + (1,) * (leaf.ndim - lead - 1))
+                nl = new_len[:, None]
+                new[name] = jnp.where(m & (leaf >= nl), -1, leaf)
+            elif name == "slen":
+                m = mask.reshape((1,) * lead + (-1,) + (1,) * (leaf.ndim - lead - 1))
+                nl = new_len.astype(leaf.dtype)
+                new[name] = jnp.where(m, jnp.minimum(leaf, nl), leaf)
+            else:
+                new[name] = leaf
+        out.append(new)
+    return out
+
+
 def stage_decode(params, cfg: ModelCfg, stage: Stage, x, states, *,
                  sp_decode: bool = False):
     if stage.repeats == 1:

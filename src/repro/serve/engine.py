@@ -65,6 +65,24 @@ from PR 1–4, and the reason any policy mix stays near peak):
   at KV-write time (write-quantize → paged read-dequant → COW-with-scales),
   so the byte-denominated budget holds 2-4× the pages — more concurrent
   decoders and more resident prefix pages from the same memory.
+- **More than one accepted token per page-stream** (``spec_k=`` — this PR):
+  decode is memory-bound on KV bytes, so once a slot's pages stream for
+  its one decode token, verifying k more tokens against that same stream
+  is near-free.  The lifecycle is draft → verify → accept/rollback:
+  the SpeculativeScheduler wrapper DRAFTS k continuation tokens per
+  decoding slot by prompt lookup over the slot's own prompt+output
+  history (no second model), the engine packs them at the slot's next
+  consecutive positions in the leftover token budget (decode-first and
+  prefill priority are untouched — speculation is just a packing policy)
+  and VERIFIES all chains in the one forward via a (B, 1+spec_k)
+  ``logit_idx`` — row j is the model's prediction given the draft prefix
+  up to j.  The engine ACCEPTS the longest agreeing prefix plus the
+  correction/bonus token sampled from the first disagreeing row, and for
+  rejected tails ROLLS BACK kpos/slen via one more control-plane program
+  (``serve_step.make_spec_rollback``) so stale rows are dead until
+  overwritten.  Per-(request, position) seeded sampling keeps transcripts
+  token-identical with speculation on or off at any temperature, and the
+  serve-path trace count stays at exactly one.
 
 The PR 1 two-phase path is kept behind ``ragged=False`` for A/B (admission
 policy applies there too; pack ordering is a ragged-path concept).
@@ -136,7 +154,8 @@ class ServeEngine:
                  token_budget: int = 128, greedy: bool = True,
                  ragged: bool = True, flash_decode: bool = False,
                  prefix_cache: bool = True, kv_dtype: Optional[str] = None,
-                 scheduler=None, mesh=None, host_pages: int = 0):
+                 scheduler=None, mesh=None, host_pages: int = 0,
+                 spec_k: int = 0):
         self.params = params
         self.cfg = cfg
         # KV-head tensor parallelism (``mesh=`` — a jax.sharding.Mesh, e.g.
@@ -178,9 +197,29 @@ class ServeEngine:
         # snapshots and the O(queue) candidate/validation/rebuild work —
         # a deep backlog costs the default policy nothing extra per tick
         self.scheduler = make_scheduler(scheduler)
+        # speculative decoding rides the policy layer: ``spec_k=`` wraps the
+        # resolved policy in a SpeculativeScheduler (prompt-lookup drafts of
+        # depth k), or pass a SpeculativeScheduler as ``scheduler=`` directly
+        # — either way the engine reads the depth off the policy object
+        from repro.serve.scheduler import SpeculativeScheduler
+
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if spec_k and not isinstance(self.scheduler, SpeculativeScheduler):
+            if not ragged:
+                raise ValueError("speculative decoding needs the ragged "
+                                 "path (spec_k > 0 with ragged=False)")
+            self.scheduler = SpeculativeScheduler(self.scheduler,
+                                                  spec_k=spec_k)
         self.scheduler_name = getattr(self.scheduler, "name",
                                       type(self.scheduler).__name__)
-        cls = type(self.scheduler)
+        # the fast-path probes must see THROUGH the speculative wrapper: its
+        # orderings delegate verbatim, so a wrapped default policy still
+        # earns the no-EngineView hot loop
+        probe = (self.scheduler.inner
+                 if isinstance(self.scheduler, SpeculativeScheduler)
+                 else self.scheduler)
+        cls = type(probe)
         self._default_admit = (
             getattr(cls, "admission_order", None) is Scheduler.admission_order)
         self._default_pack = (
@@ -205,9 +244,21 @@ class ServeEngine:
         # prefix sharing needs EVERY layer's state to live in shareable
         # pages: recurrent mixers and windowed circular buffers are per-slot
         # and cannot be inherited, so hybrids serve with sharing off
-        self.prefix_cache = bool(prefix_cache) and self._has_paged and all(
+        all_global = self._has_paged and all(
             blk.mixer == "attn" and blk.attn.window is None
             for st in cfg.stages for blk in st.pattern)
+        self.prefix_cache = bool(prefix_cache) and all_global
+        # speculative decoding has the same applicability gate, for the
+        # dual reason: rolling back a rejected draft tail is a kpos/slen
+        # metadata edit for paged global attention, but recurrent state and
+        # windowed circular buffers advance destructively — there is
+        # nothing to roll back to.  Hybrids silently serve unspeculated
+        # (same convention as prefix_cache; stats["spec_k"] reports 0).
+        self._spec_k = (int(getattr(self.scheduler, "spec_k", 0))
+                        if all_global else 0)
+        self._draft = getattr(self.scheduler, "draft", None)
+        if self._draft is None:
+            self._spec_k = 0
         # the page budget is a BYTE budget: the default pool spends the same
         # bytes the unquantized (activation-dtype) pool would, so an int8
         # pool holds ~2-4× the pages — more concurrent requests and more
@@ -244,7 +295,6 @@ class ServeEngine:
         self.queue: deque = deque()
         self.slots: List[Optional[_Slot]] = [None] * batch_size
         self._uid = 0
-        self._rngs: Dict[int, np.random.Generator] = {}
         self.completion_order: List[int] = []
         self._state = None  # persistent: the pool doubles as the prefix cache
         self._stats = {"chunk_ticks": 0, "decode_ticks": 0, "ragged_ticks": 0,
@@ -258,6 +308,16 @@ class ServeEngine:
                        "host_hits": 0, "host_pages_promoted": 0,
                        "host_pool_pages": self.host_pages,
                        "scheduler": self.scheduler_name,
+                       # speculative-decoding accounting: draft depth in
+                       # effect (0 = off/gated-off), draft tokens packed
+                       # into verify rows, accepted vs rejected split,
+                       # rollback dispatches, and how many (slot, tick)
+                       # sampling opportunities there were — emitted tokens
+                       # divided by sampled_slot_ticks is the accepted-
+                       # tokens-per-tick headline (> 1 only via drafts)
+                       "spec_k": self._spec_k, "spec_drafted": 0,
+                       "spec_accepted": 0, "spec_rejected": 0,
+                       "spec_rollbacks": 0, "sampled_slot_ticks": 0,
                        # memory-representation accounting: bytes of paged KV
                        # one token occupies (streams per context token at
                        # decode) and the pool's byte footprint at this dtype
@@ -294,9 +354,13 @@ class ServeEngine:
         # the hot loop (no-copy contract asserted by pointer identity in
         # tests/test_kv_quant.py)
         donate = (STATE_DONATE_ARGNUM,)
+        # width = most tokens one slot contributes to a pack: a prefill
+        # chunk plus its handoff decode token, or a decode token plus its
+        # spec_k draft chain — whichever is wider (compile-time constant)
         self._ragged_step = jax.jit(
             _count_traces(make_ragged_step(
-                cfg, width=prefill_chunk + 1, flash_decode=flash_decode)),
+                cfg, width=max(prefill_chunk + 1, 1 + self._spec_k),
+                flash_decode=flash_decode)),
             donate_argnums=donate)
         step = lambda wl: (lambda p, s, t, qp, v: M.paged_step(
             p, cfg, s, t, qp, v, with_logits=wl, flash_decode=flash_decode))
@@ -314,11 +378,18 @@ class ServeEngine:
         # tiered page movers: demotion gather (state stays live) and
         # promotion scatter (state donated, pools update in place); page id
         # is data, so each traces at most once for the engine's lifetime
-        from repro.serve.serve_step import make_page_gather, make_page_insert
+        from repro.serve.serve_step import (make_page_gather,
+                                            make_page_insert,
+                                            make_spec_rollback)
 
         self._gather_page = jax.jit(make_page_gather(cfg))
         self._insert_page = jax.jit(make_page_insert(cfg),
                                     donate_argnums=(0,))
+        # speculative rejection: invalidate kpos/slen for rolled-back draft
+        # tails (pools/scales untouched); dispatched only on ticks that
+        # rejected drafts, traced at most once like the other movers
+        self._spec_rollback = jax.jit(make_spec_rollback(cfg),
+                                      donate_argnums=(0,))
 
     # -- public surface ---------------------------------------------------
     def submit(self, prompt, max_tokens: int = 16, eos_id=None, *,
@@ -357,9 +428,6 @@ class ServeEngine:
             raise ValueError(
                 f"request needs {need} pages but the pool has only "
                 f"{self.n_pages} (raise max_pages or shrink the request)")
-        if temperature > 0.0:
-            self._rngs[self._uid] = np.random.default_rng(
-                seed if seed is not None else self._uid)
         self.queue.append(req)
         return RequestHandle(req, self)
 
@@ -375,7 +443,6 @@ class ServeEngine:
             if req.uid == uid:
                 del self.queue[i]
                 req.cancelled = req.done = True
-                self._rngs.pop(uid, None)
                 self._stats["cancelled"] += 1
                 return True
         for b, s in enumerate(self.slots):
@@ -606,7 +673,6 @@ class ServeEngine:
     def _release_slot(self, b: int) -> None:
         s = self.slots[b]
         self.pool.release(s.pages)
-        self._rngs.pop(s.req.uid, None)
         self.slots[b] = None
 
     def _index_filled_pages(self, s: _Slot) -> None:
@@ -630,10 +696,21 @@ class ServeEngine:
             s.n_indexed += 1
 
     # -- sampling / bookkeeping -------------------------------------------
-    def _sample(self, req: Request, logits_row: np.ndarray) -> int:
+    def _sample(self, req: Request, logits_row: np.ndarray,
+                ordinal: int) -> int:
         """One token from a (V,) logits row: greedy argmax at temperature 0,
-        seeded temperature/top-k sampling otherwise (one RNG draw per token,
-        so output is independent of how ticks were packed)."""
+        seeded temperature/top-k sampling otherwise.
+
+        ``ordinal`` is the emission index within the request (==
+        ``len(req.out_tokens)`` at draw time), and the RNG is keyed
+        per-(request seed, ordinal) — NOT a per-request sequential stream.
+        A sequential generator is packing-invariant only while every slot
+        emits exactly one token per tick; speculative acceptance emits a
+        whole chain in one tick, and keying each draw by its position in
+        the output keeps emission m's randomness identical whether it was
+        sampled alone, as a verify row, or re-drawn as the correction after
+        a rejected draft.  Consequence: transcripts are token-identical
+        with speculation on or off at ANY temperature, not just greedy."""
         if req.temperature == 0.0:
             return int(np.argmax(logits_row))
         logit = logits_row.astype(np.float64) / req.temperature
@@ -643,7 +720,9 @@ class ServeEngine:
         logit = logit - logit.max()
         p = np.exp(logit)
         p /= p.sum()
-        return int(self._rngs[req.uid].choice(logit.size, p=p))
+        base = req.seed if req.seed is not None else req.uid
+        rng = np.random.default_rng((base, ordinal))
+        return int(rng.choice(logit.size, p=p))
 
     def _finish_token(self, b: int, tok: int, results: Dict) -> None:
         """Book one sampled token for slot ``b``: emit, advance, retire the
@@ -673,14 +752,27 @@ class ServeEngine:
         slot-index order, bit-identical to PR 2-4).  A slot whose prompt
         completes in this pack appends its first decode token right behind
         it.  Slots admitted on a full prefix hit enter the decode section
-        on their very first tick — the whole prefill phase is skipped."""
-        T, W = self.budget, self.chunk + 1
+        on their very first tick — the whole prefill phase is skipped.
+
+        With speculation on (``spec_k`` > 0) a THIRD section follows:
+        leftover budget takes each decoding slot's prompt-lookup draft
+        chain at its next consecutive positions, and ``logit_idx`` widens
+        to (B, 1+spec_k) so the one forward returns a verify row per draft.
+        Decode-first and prefill keep strict priority over drafts — drafts
+        are speculative work and only ever consume budget nothing else
+        claimed, so non-speculative packing is bit-identical with the
+        feature on.  After the step the engine accepts the longest
+        agreeing draft prefix (plus the correction/bonus token) and rolls
+        back kpos/slen for rejected tails."""
+        T, W = self.budget, max(self.chunk + 1, 1 + self._spec_k)
+        R = 1 + self._spec_k
         tokens = np.zeros(T, np.int32)
         slot = np.zeros(T, np.int32)
         q_pos = np.zeros(T, np.int32)
         seq_idx = np.full(T, W, np.int32)
         valid = np.zeros(T, bool)
-        logit_idx = np.full(self.B, T, np.int32)
+        logit_idx = np.full((self.B, R) if self._spec_k else (self.B,),
+                            T, np.int32)
         n = 0
         sampling: List[int] = []
         tick = self._stats["ticks"]
@@ -707,7 +799,10 @@ class ServeEngine:
             q_pos[n] = s.pos
             seq_idx[n] = 0
             valid[n] = True
-            logit_idx[b] = n
+            if self._spec_k:
+                logit_idx[b, 0] = n
+            else:
+                logit_idx[b] = n
             sampling.append(b)
             n += 1
         for b in prefill_order:
@@ -735,9 +830,55 @@ class ServeEngine:
                     q_pos[n] = s.pos
                     seq_idx[n] = c
                     valid[n] = True
-                    logit_idx[b] = n
+                    if self._spec_k:
+                        logit_idx[b, 0] = n
+                    else:
+                        logit_idx[b] = n
                     sampling.append(b)
                     n += 1
+        # draft section: leftover budget takes each decoding slot's prompt-
+        # lookup chain at its next consecutive positions.  The drafted dict
+        # is the tick's DRAFT LEDGER: slot -> proposed tokens, with the
+        # verify rows at logit_idx[b, 1:1+k].  Drafts never displace decode
+        # or prefill tokens and a lookup miss packs nothing, so this
+        # section is free for non-repetitive traffic.
+        drafted: Dict[int, List[int]] = {}
+        if self._spec_k:
+            for b in decode_order:
+                if n >= T:
+                    break
+                s = self.slots[b]
+                req = s.req
+                # cap by remaining output (drafting past max_tokens-1 can
+                # never be accepted) and by leftover budget
+                room = min(self._spec_k,
+                           req.max_tokens - len(req.out_tokens) - 1, T - n)
+                if room < 1:
+                    continue
+                hist = (np.concatenate([req.prompt, np.asarray(
+                            req.out_tokens, np.int32)])
+                        if req.out_tokens else req.prompt)
+                d = self._draft(hist, room)
+                if not d:
+                    continue
+                k = len(d)
+                if __debug__:
+                    # the rejected-tail contract (see PagePool.is_indexed):
+                    # draft rows land beyond the prompt, in pages the slot
+                    # privately owns — never in indexed prefix pages
+                    for pi in range((s.pos + 1) // self.page_size,
+                                    (s.pos + k) // self.page_size + 1):
+                        assert not self.pool.is_indexed(s.pages[pi]), \
+                            (b, pi, s.pages[pi])
+                tokens[n:n + k] = d
+                slot[n:n + k] = b
+                q_pos[n:n + k] = s.pos + 1 + np.arange(k)
+                seq_idx[n:n + k] = 1 + np.arange(k)
+                valid[n:n + k] = True
+                logit_idx[b, 1:1 + k] = n + np.arange(k)
+                drafted[b] = d
+                self._stats["spec_drafted"] += k
+                n += k
         results: Dict[int, List[int]] = {}
         if n == 0:
             return state, results
@@ -746,10 +887,45 @@ class ServeEngine:
         self._stats["ragged_ticks"] += 1
         self._stats["packed_tokens"] += n
         if sampling:
-            rows = np.asarray(logits)  # (B, V)
+            rows = np.asarray(logits)  # (B, V) — or (B, R, V) with spec on
+            self._stats["sampled_slot_ticks"] += len(sampling)
+            accepted: Dict[int, int] = {}
             for b in sampling:
-                self._finish_token(b, self._sample(self.slots[b].req,
-                                                   rows[b]), results)
+                req = self.slots[b].req
+                drafts = drafted.get(b, ())
+                # verify in one pass: row j holds the model's prediction
+                # given the draft prefix d_1..d_j, so sampling row j both
+                # CHECKS draft j+1 and, on mismatch or exhaustion, IS the
+                # correction/bonus token — the chain always emits >= 1
+                j = 0
+                tok = self._sample(req, rows[b, 0] if self._spec_k
+                                   else rows[b], len(req.out_tokens))
+                while True:
+                    self._finish_token(b, tok, results)
+                    if (self.slots[b] is None or j >= len(drafts)
+                            or tok != drafts[j]):
+                        break
+                    j += 1
+                    self._stats["spec_accepted"] += 1
+                    tok = self._sample(req, rows[b, j], len(req.out_tokens))
+                accepted[b] = j
+            if drafted:
+                # roll back rejected tails: drop kpos/slen for positions at
+                # and beyond the slot's new write position.  Released slots
+                # skip it — admission's reset wipes the whole row anyway.
+                mask = np.zeros(self.B, bool)
+                new_len = np.zeros(self.B, np.int32)
+                for b, d in drafted.items():
+                    j = accepted.get(b, 0)
+                    if j < len(d):
+                        self._stats["spec_rejected"] += len(d) - j
+                        s = self.slots[b]
+                        if s is not None:
+                            mask[b] = True
+                            new_len[b] = s.pos
+                if mask.any():
+                    state = self._spec_rollback(state, mask, new_len)
+                    self._stats["spec_rollbacks"] += int(mask.sum())
         return state, results
 
     # -- legacy two-phase path (PR 1, kept behind ragged=False) -----------
@@ -797,7 +973,9 @@ class ServeEngine:
         for b, s in enumerate(self.slots):
             if s is None:
                 continue
-            self._finish_token(b, self._sample(s.req, rows[b]), results)
+            self._finish_token(b, self._sample(s.req, rows[b],
+                                               len(s.req.out_tokens)),
+                               results)
         return state, results
 
     # -- driving ----------------------------------------------------------
@@ -894,5 +1072,4 @@ class ServeEngine:
             req = self.queue.popleft()
             req.done = True
             results[req.uid] = req.out_tokens
-            self._rngs.pop(req.uid, None)
         return results

@@ -208,6 +208,21 @@ class PagePool:
         """True for an encoded host-tier page id (``n_pages + slot``)."""
         return page >= self.n_pages
 
+    def is_indexed(self, page: int) -> bool:
+        """True when a device page is owned by the prefix index.
+
+        The speculative-decoding safety contract leans on this: only full
+        PROMPT pages ever enter the index (``index_page`` is driven by
+        prefill advancing ``fill``; decode and draft tokens never advance
+        it), so a slot's decode/draft positions always land in pages this
+        returns False for — privately allocated or COW'd, refcount-held by
+        the slot alone.  Rejected-tail rollback therefore can never corrupt
+        an indexed prefix page or its int8 scale rows: the rolled-back rows
+        live exclusively in non-indexed pages, and the rollback itself only
+        touches per-slot kpos/slen metadata anyway.  The engine asserts
+        this when packing draft chains."""
+        return page in self._page_node
+
     def ref(self, page: int) -> int:
         return int(self._ref[page])
 

@@ -55,6 +55,17 @@ Policies:
   packing.  Tier-aware via ``EngineView.match_split``: within a class,
   device-warm families admit before host-warm before cold (a host hit pays
   a promotion copy; a miss pays re-prefill).
+- ``SpeculativeScheduler`` — a WRAPPER, not a peer policy: it delegates
+  all three orderings to an inner policy (any of the above) untouched and
+  adds the one thing speculation needs from the policy layer, a
+  ``draft(history, k)`` method proposing up to k continuation tokens by
+  prompt lookup (``prompt_lookup_draft``: match the tail n-gram of the
+  slot's own prompt+output history against an earlier occurrence — no
+  second model).  The engine packs the proposed chain into the leftover
+  token budget after decode-first packing and verifies it in the same
+  forward; accept/rollback is the engine's concern.  Speculation is thus
+  literally a packing policy — it composes with every admission/ordering
+  policy and inherits the one-trace and no-OOM guarantees unchanged.
 
 ``benchmarks/serve_sweep.py:scheduler_ab_scenario`` A/Bs the policies on mixed
 shared-prefix Poisson traffic; ``core.autotune.select_serve_defaults``
@@ -307,11 +318,77 @@ class ClassThenFamilyScheduler(_BoundedReorderScheduler):
                       key=lambda b: (-view.slot_requests[b].priority, b))
 
 
+def prompt_lookup_draft(history, k: int, *, ngram_max: int = 3,
+                        ngram_min: int = 1) -> List[int]:
+    """Propose up to ``k`` continuation tokens for ``history`` (the slot's
+    prompt + emitted output, a 1-D int sequence) by prompt lookup: find the
+    longest tail n-gram (``ngram_max`` down to ``ngram_min`` tokens) that
+    also occurs earlier in the history, and return the tokens that followed
+    its LATEST earlier occurrence.  Longer n-grams are tried first (more
+    context -> higher acceptance), and among equal-length matches the most
+    recent wins (recent continuations track the current phrase).  Returns
+    [] when nothing repeats — the engine simply packs no drafts for the
+    slot that tick, so lookup misses cost zero model work."""
+    h = np.asarray(history, dtype=np.int64).ravel()
+    n = h.size
+    if k < 1 or n < ngram_min + 1:
+        return []
+    for g in range(min(ngram_max, n - 1), ngram_min - 1, -1):
+        tail = h[n - g:]
+        win = np.lib.stride_tricks.sliding_window_view(h[:-1], g)
+        hits = np.flatnonzero((win == tail).all(axis=1))
+        # scan latest-first; skip matches whose continuation is empty
+        for i in hits[::-1]:
+            cont = h[i + g:i + g + k]
+            if cont.size:
+                return [int(t) for t in cont]
+    return []
+
+
+class SpeculativeScheduler(Scheduler):
+    """Compose speculative drafting onto any policy: orderings delegate to
+    ``inner`` verbatim (so pack composition, admission fairness, and SLO
+    behavior are bit-identical to the wrapped policy), and ``draft``
+    supplies per-slot prompt-lookup chains of depth <= ``spec_k`` that the
+    engine appends to the pack's leftover budget.  ``inner`` accepts
+    anything ``make_scheduler`` does (None -> FIFO, a name, an object)."""
+
+    def __init__(self, inner=None, *, spec_k: int = 4, ngram_max: int = 3,
+                 ngram_min: int = 1):
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        if not (1 <= ngram_min <= ngram_max):
+            raise ValueError(f"bad n-gram bounds ({ngram_min=}, {ngram_max=})")
+        self.inner = make_scheduler(inner)
+        self.spec_k = int(spec_k)
+        self.ngram_max = int(ngram_max)
+        self.ngram_min = int(ngram_min)
+        self.name = f"speculative({self.inner.name},k={self.spec_k})"
+
+    def admission_order(self, view: EngineView) -> Sequence[int]:
+        return self.inner.admission_order(view)
+
+    def decode_order(self, view: EngineView,
+                     ready: Sequence[int]) -> Sequence[int]:
+        return self.inner.decode_order(view, ready)
+
+    def prefill_order(self, view: EngineView,
+                      filling: Sequence[int]) -> Sequence[int]:
+        return self.inner.prefill_order(view, filling)
+
+    def draft(self, history, k: int) -> List[int]:
+        """Draft chain for one slot: at most min(k, spec_k) tokens."""
+        return prompt_lookup_draft(history, min(int(k), self.spec_k),
+                                   ngram_max=self.ngram_max,
+                                   ngram_min=self.ngram_min)
+
+
 SCHEDULERS = {
     "fifo": FifoScheduler,
     "prefix-aware": PrefixAwareScheduler,
     "slo": SloScheduler,
     "class-then-family": ClassThenFamilyScheduler,
+    "speculative": SpeculativeScheduler,
 }
 
 

@@ -31,6 +31,19 @@ engine's lifetime), and the insert is jitted with the state donated — same
 contracts as the COW copy, so tiering never perturbs the serve-path trace
 count or the no-copy hot loop.
 
+SPECULATIVE decoding is, by the same argument, just a packing policy: the
+drafter proposes k continuation tokens for a decoding slot and the engine
+packs them at the slot's next k positions inside the SAME (T,) budget —
+to the compiled program they are indistinguishable from any other valid
+(slot, position) entries, and ``logit_idx`` widening from (B,) to (B, R)
+merely asks the LM head for R rows per slot instead of one.  Verification
+is the forward itself (row j's logits are the model's prediction given
+the draft prefix up to j); accept/rollback is host-side bookkeeping plus
+ONE more control-plane program, ``make_spec_rollback``, which drops the
+kpos/slen metadata of rejected draft rows (``models.model
+.rollback_paged_slots``).  No draft, accept, or reject path ever adds a
+serve-path trace: ``stats["traces"]`` stays 1 with speculation on.
+
 ``STATE_AXES`` names the logical axes of every decode-state leaf — the
 lock-step cache (k/v/k_pos/pos) and the ragged/paged engine's leaves (kp/vp
 page pools, ptab block tables, kpos per-slot positions, slen fill counts) —
@@ -116,6 +129,20 @@ def make_page_insert(cfg: ModelCfg):
         return M.insert_kv_page(cfg, state, page_data, page)
 
     return page_insert
+
+
+def make_spec_rollback(cfg: ModelCfg):
+    """Speculative-rejection mover: ``f(state, mask, new_len) -> state``
+    invalidating every masked slot's KV rows at positions >= new_len
+    (kpos -> -1, slen clamped; pools/scales/ptab untouched — see
+    ``models.model.rollback_paged_slots``).  Jit with
+    ``donate_argnums=(0,)``; the engine dispatches it only on ticks that
+    rejected a draft tail, and it traces once for the engine's lifetime
+    like every other control-plane program."""
+    def spec_rollback(state, mask, new_len):
+        return M.rollback_paged_slots(cfg, state, mask, new_len)
+
+    return spec_rollback
 
 
 # leaf name -> logical axes for decode-state leaves (unstacked; a scanned

@@ -1,0 +1,77 @@
+"""launch.hillclimb — the perf-hillclimbing driver (hypothesis → lower →
+score → confirm/refute log), wired into tier 1.
+
+The module was a seed asset no test imported.  Two things need gating:
+the import-time footgun (the module prepends a 512-device
+``xla_force_host_platform_device_count`` to ``XLA_FLAGS`` for its CLI use
+— importing it into a live process must not perturb an already-initialized
+jax backend, and tests must restore the env), and one tiny-cell
+``run_plan`` step end to end: lower candidates on a real mesh, score them
+with ``roofline_terms``, and write the hypothesis→score rows JSON.
+"""
+import json
+import os
+
+import jax
+
+
+def test_hillclimb_import_is_env_safe():
+    """Importing the module after jax is initialized neither changes the
+    live device topology (the backend is already up; the module's
+    ``XLA_FLAGS`` mutation only matters for its ``python -m`` CLI entry)
+    nor is allowed to leak that mutation into the test process env."""
+    before_flags = os.environ.get("XLA_FLAGS")
+    n_before = jax.device_count()  # force backend init BEFORE the import
+    try:
+        import repro.launch.hillclimb as hc
+
+        assert jax.device_count() == n_before
+        # the CLI plans are structurally sound: every cell names a real
+        # arch and shape, and every candidate is (hypothesis, overrides)
+        from repro.configs import SHAPES_BY_NAME, get_config
+
+        assert set(hc.PLANS) == {"glm4", "arctic", "qwen15"}
+        for plan in hc.PLANS.values():
+            get_config(plan["arch"])  # raises on unknown arch
+            assert plan["shape"] in SHAPES_BY_NAME
+            assert all(isinstance(label, str) and isinstance(ov, dict)
+                       for label, ov in plan["candidates"])
+    finally:
+        if before_flags is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = before_flags
+
+
+def test_hillclimb_tiny_cell_step(multidevice, tmp_path):
+    """One ``run_plan`` step on a tiny hand-built plan: both candidates
+    lower and score (no error rows), the log row carries the full
+    hypothesis → before/after fields, and the JSON lands on disk."""
+    out = tmp_path / "hillclimb"
+    out.mkdir()
+    stdout = multidevice(f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+jax.devices()  # initialize the 8-device backend before the import
+import repro.launch.hillclimb as hc
+from pathlib import Path
+from repro.launch.mesh import make_mesh
+
+assert jax.device_count() == 8  # the module's 512-device flag was too late
+plan = {{"arch": "xlstm-350m", "shape": "decode_32k",
+         "candidates": [("baseline", {{}}),
+                        ("H1 remat=dots: less recompute", {{"remat": "dots"}})]}}
+mesh = make_mesh((4, 2), ("data", "model"))
+rows = hc.run_plan("tiny", plan, mesh, Path({str(out)!r}))
+assert len(rows) == 2, rows
+assert all("error" not in r for r in rows), rows
+for r in rows:
+    assert r["cell"] == "tiny"
+    assert r["step_bound_s"] > 0 and r["dominant"] in (
+        "compute_s", "memory_s", "collective_s"), r
+print("OK", [r["label"][:12] for r in rows])
+""", n_devices=8, timeout=600)
+    assert "OK" in stdout
+    rows = json.loads((out / "tiny.json").read_text())
+    assert len(rows) == 2 and all("step_bound_s" in r for r in rows)

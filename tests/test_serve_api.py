@@ -237,6 +237,90 @@ def test_class_then_family_prefill_prefers_interactive():
     assert s.prefill_order(v, [0, 1]) == [1, 0]
 
 
+def test_class_then_family_prefill_order_mixed_priorities():
+    """Prefill packing under a full mixed-class slot set: strictly by
+    priority class (higher first), slot index breaking ties WITHIN a class
+    — deterministic for any slot permutation of the same requests."""
+    s = ClassThenFamilyScheduler()
+    q = [_req(1, [1] * 8), _req(2, [2] * 8, priority=2),
+         _req(3, [3] * 8, priority=1), _req(4, [4] * 8, priority=2),
+         _req(5, [5] * 8)]
+    v = EngineView(queue=(), slot_requests=tuple(q),
+                   slot_fill=(0,) * 5, budget=32, chunk=16, page_size=4,
+                   match_len=lambda p: 0)
+    assert s.prefill_order(v, [0, 1, 2, 3, 4]) == [1, 3, 2, 0, 4]
+    # a subset of filling slots keeps the same relative order
+    assert s.prefill_order(v, [4, 2, 1]) == [1, 2, 4]
+    assert s.prefill_order(v, [0, 4]) == [0, 4]
+
+
+def test_class_then_family_prefill_unperturbed_by_host_tier_hits():
+    """Warmth — device OR host tier — is an ADMISSION concern
+    (promotion-cost ordering of ``_family_order``); once slots are
+    filling, prefill packing must order by class alone.  The same
+    mixed-priority slot set keeps an identical prefill order whether the
+    view reports cold, device-warm, or host-warm prompts — while the
+    admission side of the SAME view does reorder on the tier split."""
+    D, H = [1, 1, 1, 1], [2, 2, 2, 2]
+    # batch device-warm, batch host-warm, interactive cold
+    q = [_req(1, D + [1]), _req(2, H + [2]), _req(3, [3] * 8, priority=1)]
+
+    def split(prompt):
+        head = tuple(int(t) for t in prompt[:4])
+        return (4, 0) if head == tuple(D) else \
+            (0, 4) if head == tuple(H) else (0, 0)
+
+    s = ClassThenFamilyScheduler(depth=8)
+    cold = EngineView(queue=tuple(q), slot_requests=tuple(q),
+                      slot_fill=(0, 0, 0), budget=32, chunk=16, page_size=4,
+                      match_len=lambda p: 0)
+    tiered = dataclasses.replace(cold, match_len=lambda p: sum(split(p)),
+                                 match_split=split)
+    # admission sees the tiers: interactive class first, then device-warm
+    # batch before host-warm batch
+    assert list(s.admission_order(tiered)) == [2, 0, 1]
+    # prefill does not: interactive first, batch slots in slot order, and
+    # the host-tier hit moves nothing
+    for v in (cold, tiered):
+        assert s.prefill_order(v, [0, 1, 2]) == [2, 0, 1]
+
+
+def test_class_then_family_prefill_with_host_hits_end_to_end(qwen):
+    """Engine-level: a TIERED pool under the composite policy — a batch
+    family whose prefix was demoted to host RAM replays (host hits pay a
+    promotion) while an interactive arrival prefills; the interactive
+    request takes the prefill budget first (first token within its own
+    prefill ticks, not after the batch wave) and every transcript stays
+    exactly the solo tokens."""
+    cfg, params = qwen
+    page = 8
+    eng = _engine(params, cfg, batch_size=2, scheduler="class-then-family",
+                  max_pages=4, host_pages=12, prefill_chunk=8,
+                  cache_len=CACHE)
+    [fam] = _prompts(cfg, [2 * page], seed=310)
+    family = [np.concatenate([fam, s]) for s in _prompts(cfg, [2, 3],
+                                                         seed=311)]
+    # populate: the family's full prefix pages index; then a filler wave
+    # allocates past the 4-page device pool, demoting the cached prefix
+    for p in family:
+        eng.submit(p, max_tokens=4)
+    eng.run()
+    [filler] = _prompts(cfg, [3 * page], seed=313)
+    eng.submit(filler, max_tokens=4)
+    eng.run()
+    assert eng.stats["demotions"] >= 1
+    # replay the family (host-warm batch) with an interactive arrival
+    hb = [eng.submit(p, max_tokens=4) for p in family]
+    hi = eng.submit(_prompts(cfg, [12], seed=312)[0], max_tokens=4,
+                    priority=1)
+    got = eng.run()
+    assert eng.stats["host_hits"] >= 1
+    for h, p in zip(hb, family):
+        assert got[h] == _solo_decode(params, cfg, p, 4)
+    assert got[hi] == _solo_decode(params, cfg, hi.request.prompt, 4)
+    assert eng.reclaimable_pages == eng.n_pages
+
+
 def test_class_then_family_head_bypass_is_bounded():
     """The composite inherits the shared fairness backstop: a batch head
     bypassed max_bypass times by interactive arrivals pins strict FIFO."""
@@ -626,6 +710,46 @@ def test_cancel_interleavings_never_leak_pages_tiered(qwen, ops):
     assert set(eng._host_store) == set(eng.pool._host_node)
     assert sorted(eng.pool._host_free + list(eng.pool._host_node)) == list(
         range(eng.host_pages))
+
+
+@settings(max_examples=5, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["submit", "tick", "cancel"]),
+                              st.integers(0, 7)),
+                    min_size=3, max_size=14))
+def test_cancel_interleavings_never_leak_pages_speculative(qwen, ops):
+    """The same no-leak property through a SPECULATIVE engine: interleaved
+    submits use repetitive (tiled-pattern) prompts so ticks continuously
+    draft, accept, reject, and roll back while cancels land on slots with
+    draft chains in flight — every interleaving must still drain to a
+    fully reclaimable pool with zero refcounts."""
+    cfg, params = qwen
+    fn = test_cancel_interleavings_never_leak_pages_speculative
+    if not hasattr(fn, "_eng"):
+        fn._eng = _engine(params, cfg, max_pages=12, spec_k=3)
+    eng = fn._eng
+    [shared] = _prompts(cfg, [16], seed=106)
+    handles = []
+    rng = np.random.RandomState(sum(i for _, i in ops))
+    before = eng.stats["spec_drafted"]
+    for op, i in ops:
+        if op == "submit":
+            # alternate prefix-sharing, repetitive (drafts fire), random
+            if i % 3 == 0:
+                prompt = np.concatenate(
+                    [shared, rng.randint(0, cfg.vocab_size, 1 + i)])
+            elif i % 3 == 1:
+                prompt = np.tile(rng.randint(0, cfg.vocab_size, 3), 5 + i)
+            else:
+                prompt = rng.randint(0, cfg.vocab_size, 4 + i)
+            handles.append(eng.submit(prompt, max_tokens=1 + i % 6))
+        elif op == "tick":
+            eng.tick()
+        elif handles:
+            handles[i % len(handles)].cancel()
+    eng.run()
+    assert all(h.done for h in handles)
+    assert (eng._ref == 0).all()
+    assert eng.reclaimable_pages == eng.n_pages
 
 
 # ---------------------------------------------------------------------------
