@@ -42,6 +42,19 @@ analogue sweeps (concurrent users × prompt-length mix × page size) through
   token-identity of greedy transcripts (verification is exact), and the
   page-leak gate after a cancel-mid-draft wave.  ``--spec-only`` runs just
   this scenario (the CI spec-smoke job).
+- **preemption A/B (preempt vs admission-stall)** — the graceful-
+  degradation experiment: an overload wave of deadline-bound interactive
+  chats arrives while long batch hogs fill an undersized pool exactly.
+  The stall arm queues the chats behind the hogs (tight deadlines expire
+  un-served); the preempt arm parks a hog's private KV to the host tier,
+  serves the chat inside its deadline, and resumes the hog token-
+  identically.  Reports per arm SLO goodput (deadline-met interactive
+  tokens/s), p50 interactive latency, and the preempt/resume ledger; gates
+  transcripts identical to an unconstrained run, zero leaked pages on both
+  tiers, one trace, and preempt goodput >= 1.2x stall.  A fault-injected
+  chaos sub-run (``serve.chaos.FaultInjector``) holds the same no-leak +
+  identity line off the happy path.  ``--preempt-only`` runs just this
+  scenario (the CI chaos-smoke job).
 - **fp32-vs-int8 KV pool A/B at a fixed page-pool BYTE budget** — the
   quantized-working-set experiment: both arms get the same pool bytes, so
   the int8 arm holds 2-4× the resident pages and admits more concurrent
@@ -88,7 +101,9 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.roofline import mixed_bound
 from repro.models import model as M
+from repro.serve.chaos import FaultInjector
 from repro.serve.engine import ServeEngine, kv_page_bytes
+from repro.serve.errors import Cancelled, DeadlineExceeded
 from repro.serve.reference import ReferenceEngine
 
 # mixed-length mix: short chat turns + a few long-context stragglers
@@ -556,6 +571,191 @@ def speculative_scenario(cfg, params, *, batch_size: int = 4,
                                    and out["spec-off"]["page_leak_free"])}
 
 
+def preemption_scenario(cfg, params, *, page_size: int = 8,
+                        n_hogs: int = 2, hog_tokens: int = 48,
+                        n_chats: int = 6, chat_tokens: int = 4,
+                        tight_deadline: int = 30, loose_deadline: int = 80,
+                        seed: int = 37, warm: bool = True,
+                        chaos: bool = True):
+    """Preemption A/B — an overload wave through an undersized pool.
+
+    Traffic: ``n_hogs`` batch requests (priority 0, long ``hog_tokens``
+    decode) sized so their footprints fill the device pool EXACTLY, then an
+    interactive wave (priority 1, ``deadline_ticks=`` alternating tight /
+    loose) arriving while both slots decode hogs.  The stall arm
+    (``preempt=False``) can only queue the chats behind the hogs: every
+    tight-deadline chat expires un-served, the loose ones queue-jump only
+    once a hog finishes.  The preempt arm parks a hog's private KV to the
+    host tier (PR 7 movers), serves the chat inside its deadline, then
+    promotes the hog back and finishes it — same transcripts, tokens moved
+    not changed.
+
+    Goodput is the SLO metric: interactive tokens delivered WITHIN their
+    deadline per second (batch tokens are best-effort and reported in
+    ``tokens_per_s``).  Gates: completed transcripts token-identical to an
+    unconstrained (big-pool, no-deadline) run in every arm, zero leaked
+    pages on both tiers, ``traces == 1`` through preempt/resume cycles,
+    preempt goodput >= 1.2x stall, p50 interactive latency no worse than
+    the stall arm's.  ``chaos=True`` adds a fault-injected sub-run
+    (``serve.chaos.FaultInjector``: alloc failures, random cancels, host
+    eviction storms, stalled ticks) holding the same no-leak + identity
+    line off the happy path.  ``--preempt-only`` runs just this scenario
+    (the CI chaos-smoke job)."""
+    rng = np.random.RandomState(seed)
+    hog_prompts = [rng.randint(0, cfg.vocab_size, 3 * page_size)
+                   for _ in range(n_hogs)]
+    chat_prompts = [rng.randint(0, cfg.vocab_size, 6)
+                    for _ in range(n_chats)]
+    hog_fp = 3 + -(-hog_tokens // page_size)
+    # pool: exactly the hogs' footprints — a chat can only enter by
+    # preemption (or by waiting a whole hog out)
+    max_pages = n_hogs * hog_fp
+    cache_len = 3 * page_size + hog_tokens + page_size
+    deadlines = [tight_deadline if j % 2 == 0 else loose_deadline
+                 for j in range(n_chats)]
+    stream = ([(0, "hog", i) for i in range(n_hogs)]
+              + [(4 + j, "chat", j) for j in range(n_chats)])
+
+    def make_engine(preempt, fault_injector=None, big=False):
+        return ServeEngine(params, cfg, batch_size=2, cache_len=cache_len,
+                           page_size=page_size, prefill_chunk=3 * page_size,
+                           token_budget=3 * page_size + 8,
+                           max_pages=4 * max_pages if big else max_pages,
+                           host_pages=2 * max_pages, scheduler="slo",
+                           preempt=preempt, fault_injector=fault_injector)
+
+    def drive(eng, with_deadlines=True):
+        handles, submit_t = {}, {}
+        i, tick = 0, 0
+        t0 = time.perf_counter()
+        while i < len(stream) or not eng.idle:
+            while i < len(stream) and stream[i][0] <= tick:
+                _, kind, j = stream[i]
+                if kind == "hog":
+                    h = eng.submit(hog_prompts[j], max_tokens=hog_tokens)
+                else:
+                    h = eng.submit(chat_prompts[j], max_tokens=chat_tokens,
+                                   priority=1,
+                                   deadline_ticks=(deadlines[j]
+                                                   if with_deadlines
+                                                   else None))
+                handles[(kind, j)] = h
+                submit_t[(kind, j)] = time.perf_counter()
+                i += 1
+            eng.tick()
+            tick += 1
+            assert tick < 100_000, "preemption scenario failed to drain"
+        return time.perf_counter() - t0, handles, submit_t
+
+    def completed_of(handles):
+        return {k: list(h.request.out_tokens) for k, h in handles.items()
+                if h.request.done and h.request.error is None
+                and not h.request.cancelled}
+
+    def leak_free(eng):
+        pool = eng.pool
+        return bool((eng._ref == 0).all()
+                    and eng.reclaimable_pages == eng.n_pages
+                    and pool.parked_pages == 0
+                    and len(pool._host_free) + pool.host_cached_pages
+                    == pool.host_pages
+                    and set(eng._host_store) == set(pool._host_node))
+
+    # unconstrained reference transcripts: big pool, no deadlines, no
+    # pressure — what every request SHOULD say whenever it completes
+    ref = make_engine(False, big=True)
+    uids = ([ref.submit(p, max_tokens=hog_tokens) for p in hog_prompts]
+            + [ref.submit(p, max_tokens=chat_tokens, priority=1)
+               for p in chat_prompts])
+    res = ref.run()
+    expect = {("hog", i): res[uids[i]] for i in range(n_hogs)}
+    expect.update({("chat", j): res[uids[n_hogs + j]]
+                   for j in range(n_chats)})
+
+    out = {}
+    for mode, preempt in (("stall", False), ("preempt", True)):
+        eng = make_engine(preempt)
+        if warm:  # compile every program (park/unpark movers included)
+            drive(eng)
+            eng.drop_prefix_cache()
+        before = dict(eng.stats)
+        skip = len(eng.token_log)
+        dt, handles, submit_t = drive(eng)
+        completed = completed_of(handles)
+        # queue-jump metric over COMPLETED chats only (expired ones never
+        # produced a served token): mean wall time per token since submit
+        last_t, n_seen = {}, {}
+        for uid, _, t in eng.token_log[skip:]:
+            last_t[uid] = t
+            n_seen[uid] = n_seen.get(uid, 0) + 1
+        lat = [(last_t[int(h)] - submit_t[k]) / n_seen[int(h)] * 1e3
+               for k, h in handles.items()
+               if k[0] == "chat" and k in completed and int(h) in last_t]
+        delta = {s: eng.stats[s] - before[s]
+                 for s in ("ticks", "preemptions", "resumes",
+                           "resume_park_hits", "resume_reprefills",
+                           "preempt_pages_parked", "deadline_expired")}
+        out[mode] = {
+            "goodput_tokens_per_s": sum(
+                len(v) for k, v in completed.items()
+                if k[0] == "chat") / dt,
+            "tokens_per_s": sum(len(v) for v in completed.values()) / dt,
+            "interactive_completed": sum(1 for k in completed
+                                         if k[0] == "chat"),
+            "interactive_expired": sum(
+                1 for h in handles.values()
+                if isinstance(h.request.error, DeadlineExceeded)),
+            "p50_interactive_ms": (float(np.percentile(lat, 50))
+                                   if lat else float("nan")),
+            **delta,
+            "traces": eng.stats["traces"],
+            "token_identical": bool(all(completed[k] == expect[k]
+                                        for k in completed)),
+            "page_leak_free": leak_free(eng),
+        }
+
+    result = {**out,
+              "goodput_ratio": (out["preempt"]["goodput_tokens_per_s"]
+                                / max(out["stall"]["goodput_tokens_per_s"],
+                                      1e-9)),
+              "p50_interactive_ratio": (out["preempt"]["p50_interactive_ms"]
+                                        / out["stall"]["p50_interactive_ms"]),
+              "token_identical": bool(out["preempt"]["token_identical"]
+                                      and out["stall"]["token_identical"]),
+              "page_leak_free": bool(out["preempt"]["page_leak_free"]
+                                     and out["stall"]["page_leak_free"])}
+    if chaos:
+        fi = FaultInjector(seed=5, p_alloc_fail=0.15, p_cancel=0.05,
+                           p_evict_storm=0.1, p_stall=0.1)
+        eng = make_engine(True, fault_injector=fi)
+        before = dict(eng.stats)
+        _, handles, _ = drive(eng)
+        completed = completed_of(handles)
+        result["chaos"] = {
+            "completed": len(completed),
+            "cancelled": sum(isinstance(h.request.error, Cancelled)
+                             for h in handles.values()),
+            "expired": sum(isinstance(h.request.error, DeadlineExceeded)
+                           for h in handles.values()),
+            "faults_injected": len(fi.log),
+            **{s: eng.stats[s] - before[s]
+               for s in ("chaos_alloc_fails", "chaos_cancels",
+                         "chaos_evict_storms", "chaos_stalled_ticks",
+                         "preemptions", "resumes")},
+            "traces": eng.stats["traces"],
+            "token_identical": bool(all(completed[k] == expect[k]
+                                        for k in completed)),
+            "page_leak_free": leak_free(eng),
+        }
+        result["token_identical"] = bool(
+            result["token_identical"]
+            and result["chaos"]["token_identical"])
+        result["page_leak_free"] = bool(
+            result["page_leak_free"]
+            and result["chaos"]["page_leak_free"])
+    return result
+
+
 def _spec_rows(arch, spec):
     rows = []
     for mode in ("spec-off", "spec-on"):
@@ -586,6 +786,27 @@ def _tiered_rows(arch, tiered):
                  f"host_hit_rate={tiered['host_hit_rate']:.2f},"
                  "token_identical="
                  + str(tiered["token_identical"]).lower()))
+    return rows
+
+
+def _preempt_rows(arch, pre):
+    rows = []
+    for mode in ("stall", "preempt"):
+        r = pre[mode]
+        rows.append((f"serve/{arch}/preemption/{mode}",
+                     r["goodput_tokens_per_s"],
+                     f"interactive_completed={r['interactive_completed']},"
+                     f"expired={r['interactive_expired']},"
+                     f"preemptions={r['preemptions']},"
+                     f"resumes={r['resumes']},"
+                     f"p50_interactive_ms={r['p50_interactive_ms']:.1f}"))
+    ch = pre.get("chaos")
+    rows.append((f"serve/{arch}/preemption/goodput_ratio",
+                 pre["goodput_ratio"],
+                 f"x-over-stall,"
+                 f"token_identical={str(pre['token_identical']).lower()},"
+                 f"page_leak_free={str(pre['page_leak_free']).lower()},"
+                 f"chaos_faults={ch['faults_injected'] if ch else 0}"))
     return rows
 
 
@@ -928,6 +1149,10 @@ def main(argv=None):
                     help="skip the main sweep; run only the speculative "
                          "decoding A/B (spec-off vs spec-on on the "
                          "repetitive completion workload)")
+    ap.add_argument("--preempt-only", action="store_true",
+                    help="skip the main sweep; run only the preemption "
+                         "A/B (preempt vs admission-stall under an "
+                         "overload wave) plus the chaos sub-run")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + latency results as JSON")
     args = ap.parse_args(argv)
@@ -937,6 +1162,7 @@ def main(argv=None):
         args.sharded = True
     rows, lat, pre, kv_ab, sched_ab, tiered, spec = (
         [], None, None, None, None, None, None)
+    preemption = None
     if args.tiered_only:
         cfg = get_config(args.arch, smoke=True)
         params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -947,6 +1173,11 @@ def main(argv=None):
         params = M.init_params(jax.random.PRNGKey(0), cfg)
         spec = speculative_scenario(cfg, params, warm=not args.cold)
         rows = _spec_rows(args.arch, spec)
+    elif args.preempt_only:
+        cfg = get_config(args.arch, smoke=True)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        preemption = preemption_scenario(cfg, params, warm=not args.cold)
+        rows = _preempt_rows(args.arch, preemption)
     elif not args.sharded_only:
         rows, lat, pre, kv_ab, sched_ab, tiered, spec = sweep(
             args.arch, args.users, args.page_sizes, args.max_tokens,
@@ -985,6 +1216,7 @@ def main(argv=None):
             "scheduler_ab": sched_ab,
             "tiered_kv": tiered,
             "speculative": spec,
+            "preemption": preemption,
             # host_pool_pages axis prices the tiered point's promotion
             # traffic against untiered re-prefill; the spec_ks axis prices
             # draft-token goodput on the repetitive decode point

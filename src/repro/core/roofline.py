@@ -183,7 +183,8 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
                 kv_dtype=None, n_devices: int = 1,
                 promoted_pages: float = 0.0,
                 draft_tokens: float = 0.0,
-                accept_rate: float = 0.0) -> Dict:
+                accept_rate: float = 0.0,
+                swapped_pages: float = 0.0) -> Dict:
     """Analytic bound for ONE ragged tick — the decode/prefill roofline blend.
 
     Scores a pack of ``n_decode`` decode tokens + ``n_prefill`` prefill-chunk
@@ -224,6 +225,21 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
     the term is priced against is re-prefilling the same tokens, which
     pays compute AND pool writes — a host hit wins whenever
     ``promotion_s`` is below the re-prefill tick it replaces.
+
+    ``swapped_pages`` prices PREEMPTION swap traffic the same way: the
+    average pool pages per tick moving across the host link for slot
+    preemption — parks (device→host demote gathers of a victim's private
+    pages) plus unparks (host→device promote scatters at resume).  Swap
+    bytes are identical to promotion bytes per page and cross the same
+    ``hw.h2d_bw`` link, overlapped with the tick's compute just like
+    promotions (the gather is issued at preemption, the scatter at
+    re-admission), so they fold into the SAME third roof:
+    ``max(compute, memory, promotion + swap)``.  What preemption buys
+    against that cost: the stall arm pays the victim's pages sitting idle
+    under head-of-line blocking; the preempt arm pays one park + one
+    unpark per victim — goodput wins whenever the blocked requests'
+    tokens outweigh the swap roof (the ``preemption_scenario`` A/B
+    measures exactly this).
 
     ``draft_tokens`` / ``accept_rate`` price SPECULATIVE decoding
     (``ServeEngine(spec_k=...)``): ``draft_tokens`` verify tokens ride
@@ -291,8 +307,8 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
     # promotion term: pages/tick crossing the host->device link, overlapped
     # with the tick's compute (issued at admission) — a third roof, not an
     # added cost
-    promo_bytes = 0.0
-    if promoted_pages:
+    page_bytes = 0.0
+    if promoted_pages or swapped_pages:
         ps = page_size or 1
         for st in cfg.stages:
             for blk in st.pattern:
@@ -302,10 +318,13 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
                 a = blk.attn
                 eb = _kv_elem_bytes(kv_dtype, a.head_dim, act_bytes)
                 shards = n_devices if a.num_kv_heads % n_devices == 0 else 1
-                promo_bytes += (st.repeats * 2.0 * ps * a.num_kv_heads
-                                * a.head_dim * eb / shards)
-        promo_bytes *= promoted_pages
-    t_promo = promo_bytes / hw.h2d_bw
+                page_bytes += (st.repeats * 2.0 * ps * a.num_kv_heads
+                               * a.head_dim * eb / shards)
+    promo_bytes = page_bytes * promoted_pages
+    # preemption swap bytes are priced per page exactly like promotion
+    # (same layers, same dtype, same link) and share its overlap roof
+    swap_bytes = page_bytes * swapped_pages
+    t_promo = (promo_bytes + swap_bytes) / hw.h2d_bw
     t = max(t, t_promo, 1e-30)
     # two-phase floor: the same tokens as a decode-only tick plus a
     # prefill-only tick, each paying its own parameter sweep
@@ -319,6 +338,8 @@ def mixed_bound(cfg, n_decode: int, n_prefill: int, context_len: int,
         "memory_s": t_mem,
         "promotion_s": t_promo,
         "promoted_bytes": promo_bytes,
+        "swap_s": swap_bytes / hw.h2d_bw,
+        "swapped_bytes": swap_bytes,
         "dominant": "promotion" if t_promo >= max(t_comp, t_mem) and t_promo
                     else dom,
         "kv_read_bytes": kv_read,

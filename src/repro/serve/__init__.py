@@ -7,3 +7,7 @@ from repro.serve.scheduler import (SCHEDULERS, EngineView,  # noqa: F401
                                    Scheduler, SloScheduler, make_scheduler)
 from repro.serve.handle import Request, RequestHandle  # noqa: F401
 from repro.serve.reference import ReferenceEngine  # noqa: F401
+from repro.serve.errors import (Cancelled, DeadlineExceeded,  # noqa: F401
+                                EngineOverloaded, RequestTooLarge,
+                                ServeError)
+from repro.serve.chaos import FaultInjector  # noqa: F401

@@ -84,6 +84,49 @@ from PR 1–4, and the reason any policy mix stays near peak):
   token-identical with speculation on or off at any temperature, and the
   serve-path trace count stays at exactly one.
 
+- **Graceful degradation under pressure (``preempt=`` / ``max_queue=`` /
+  ``deadline_ticks=`` / ``fault_injector=`` — this PR)**: the paper's
+  headline is not one fast point but STABLE performance — every
+  oversubscribed (Nproc × Nthread) mix degrades smoothly instead of
+  collapsing, because the settings layer manages contention.  The serving
+  analogue is a full failure-handling lifecycle over the same seams:
+
+  * **Slot preemption** — when an admission round leaves the head
+    candidate stalled on pages (or a slot) that IN-FLIGHT work holds, and
+    the candidate strictly outranks a running request, the scheduler's
+    ``preempt_order`` picks a victim decoding slot (default: lowest
+    priority, then youngest; Slo-family policies never victimize the
+    interactive class).  The victim's private pages — non-indexed,
+    refcount-1: its generated tokens and prompt duplicates — PARK to the
+    host tier through the same demote-gather machinery as cache demotion
+    (``PagePool.park``), its shared prefix pages just drop a refcount, the
+    slot frees, and the request re-queues at the head with its generated
+    tokens intact.  On re-admission the parked pages promote back
+    (``unpark`` — the scatter overlapping the tick like any promotion), or
+    — if the park was lost or the cached prefix shrank beneath it — the
+    engine RE-PREFILLS from the request's own token history (prompt, the
+    position-L handoff duplicate, then every generated token but the
+    last) and resumes decoding at its preempted position.  Per-(request,
+    ordinal) seeded sampling makes the transcript token-identical either
+    way; the movers are the PR 7 gather/scatter and the donated reset, so
+    ``stats["traces"]`` stays 1.
+  * **Deadlines and backpressure** — ``submit(deadline_ticks=)`` arms an
+    absolute completion deadline: an expired request (queued or live)
+    aborts with a typed ``DeadlineExceeded`` carrying its partial output;
+    ``max_queue=`` bounds the admission queue, failing over-capacity
+    submits fast with ``EngineOverloaded``; a request whose footprint can
+    NEVER fit rejects at submit with ``RequestTooLarge`` (all in
+    ``serve.errors``, each subclassing the builtin its untyped predecessor
+    raised).
+  * **Fault injection** — ``fault_injector=`` (``serve.chaos.
+    FaultInjector``) draws deterministic, seed-keyed faults each tick:
+    forced allocation failures (the tick admits nothing), random cancels
+    (typed ``Cancelled``), host-tier eviction storms (parks survive; the
+    cache tier is lost), and stalled ticks (the clock — and deadlines —
+    advance; nothing runs).  Every fault degrades throughput, never
+    correctness: completed requests stay token-identical and both tiers
+    drain to zero leaked pages (tests/test_chaos.py holds the line).
+
 The PR 1 two-phase path is kept behind ``ragged=False`` for A/B (admission
 policy applies there too; pack ordering is a ragged-path concept).
 ``benchmarks/serve_sweep.py`` carries the engine and scheduler A/Bs;
@@ -117,6 +160,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelCfg
 from repro.models import model as M
+from repro.serve.errors import (DeadlineExceeded, EngineOverloaded,
+                                RequestTooLarge)
 from repro.serve.handle import Request, RequestHandle
 from repro.serve.pool import (PagePool, _PrefixNode, kv_bytes_per_token,
                               kv_page_bytes)
@@ -145,6 +190,18 @@ class _Slot:
     # compute instead of stalling it (correctness never depends on this —
     # the data dependency through the donated state orders the scatter)
     ready_tick: int = 0
+    # what prefill actually feeds the pack: the prompt, normally — or, for
+    # a preempt-resume that lost its park, the request's replayed history
+    # (prompt + position-L handoff duplicate + generated tokens[:-1]),
+    # whose length IS the preempted write position
+    prefill_tokens: Optional[np.ndarray] = None
+    # decode input to resume from when prefill completes (a re-prefilled
+    # preemptee resumes from its LAST generated token, not the prompt tail)
+    resume_tok: Optional[int] = None
+
+    def __post_init__(self):
+        if self.prefill_tokens is None:
+            self.prefill_tokens = self.req.prompt
 
 
 class ServeEngine:
@@ -155,7 +212,8 @@ class ServeEngine:
                  ragged: bool = True, flash_decode: bool = False,
                  prefix_cache: bool = True, kv_dtype: Optional[str] = None,
                  scheduler=None, mesh=None, host_pages: int = 0,
-                 spec_k: int = 0):
+                 spec_k: int = 0, preempt: bool = True,
+                 max_queue: Optional[int] = None, fault_injector=None):
         self.params = params
         self.cfg = cfg
         # KV-head tensor parallelism (``mesh=`` — a jax.sharding.Mesh, e.g.
@@ -259,6 +317,21 @@ class ServeEngine:
         self._draft = getattr(self.scheduler, "draft", None)
         if self._draft is None:
             self._spec_k = 0
+        # preemption shares the applicability gate: re-prefill resume
+        # replays history through the ragged pack, and a parked page only
+        # captures the ENTIRE per-position state when every layer is paged
+        # global attention (recurrent / windowed state has no page to park)
+        self.preempt = bool(preempt) and ragged and all_global
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        self.max_queue = max_queue
+        self.fault_injector = fault_injector
+        # uid -> park record for preempted requests awaiting re-admission:
+        # "slots" (host slots holding pages [page0, page0+len) — None when
+        # the park failed and resume must re-prefill), "pos"/"last_tok"
+        # (the decode state to resume from)
+        self._preempted: Dict[int, dict] = {}
+        self._chaos_alloc_fail = False
         # the page budget is a BYTE budget: the default pool spends the same
         # bytes the unquantized (activation-dtype) pool would, so an int8
         # pool holds ~2-4× the pages — more concurrent requests and more
@@ -318,6 +391,16 @@ class ServeEngine:
                        "spec_k": self._spec_k, "spec_drafted": 0,
                        "spec_accepted": 0, "spec_rejected": 0,
                        "spec_rollbacks": 0, "sampled_slot_ticks": 0,
+                       # robustness accounting: slot preemptions and how
+                       # their resumes went (park promoted back vs history
+                       # re-prefilled), deadline aborts, backpressure
+                       # rejections, and injected-fault counts
+                       "preemptions": 0, "resumes": 0,
+                       "resume_park_hits": 0, "resume_reprefills": 0,
+                       "preempt_pages_parked": 0, "deadline_expired": 0,
+                       "overload_rejections": 0, "chaos_alloc_fails": 0,
+                       "chaos_cancels": 0, "chaos_evict_storms": 0,
+                       "chaos_stalled_ticks": 0,
                        # memory-representation accounting: bytes of paged KV
                        # one token occupies (streams per context token at
                        # decode) and the pool's byte footprint at this dtype
@@ -396,18 +479,27 @@ class ServeEngine:
                temperature: Optional[float] = None,
                top_k: Optional[int] = None,
                seed: Optional[int] = None,
-               priority: int = 0) -> RequestHandle:
+               priority: int = 0,
+               deadline_ticks: Optional[int] = None) -> RequestHandle:
         """Queue one request; returns a streaming ``RequestHandle`` (an
         ``int`` subclass carrying the uid, so legacy id-keyed drivers are
         unchanged).  ``priority`` is the scheduling class read by
-        ``SloScheduler`` (>= 1 interactive, 0 batch; FIFO ignores it)."""
+        ``SloScheduler`` (>= 1 interactive, 0 batch; FIFO ignores it).
+
+        ``deadline_ticks`` arms a completion deadline that many engine
+        ticks from now: a request still unfinished when it expires aborts
+        with a typed ``DeadlineExceeded`` (partial output attached) raised
+        from its handle.  A request whose footprint can NEVER fit rejects
+        immediately with ``RequestTooLarge``; with ``max_queue=`` set, an
+        over-capacity submit rejects with ``EngineOverloaded`` instead of
+        growing the backlog unboundedly (both in ``serve.errors``)."""
         prompt = np.asarray(prompt, np.int32)
         if prompt.size == 0:
             raise ValueError("empty prompt")
         if max_tokens < 1:
             raise ValueError(f"max_tokens must be >= 1, got {max_tokens}")
         if prompt.size + max_tokens > self.cache_len:
-            raise ValueError(
+            raise RequestTooLarge(
                 f"len(prompt)+max_tokens = {prompt.size + max_tokens} "
                 f"exceeds cache_len={self.cache_len}")
         if temperature is None:
@@ -416,42 +508,81 @@ class ServeEngine:
             raise ValueError(f"temperature must be >= 0, got {temperature}")
         if top_k is not None and top_k < 1:
             raise ValueError(f"top_k must be >= 1, got {top_k}")
+        if deadline_ticks is not None and deadline_ticks < 1:
+            raise ValueError(
+                f"deadline_ticks must be >= 1, got {deadline_ticks}")
+        if (self.max_queue is not None
+                and len(self.queue) >= self.max_queue):
+            self._stats["overload_rejections"] += 1
+            raise EngineOverloaded(
+                f"admission queue full ({len(self.queue)} >= "
+                f"max_queue={self.max_queue}): shed load or retry later")
         self._uid += 1
         req = Request(self._uid, prompt, max_tokens, eos_id,
                       temperature=temperature, top_k=top_k, seed=seed,
                       priority=priority)
+        if deadline_ticks is not None:
+            req.deadline_tick = self._stats["ticks"] + deadline_ticks
         # admission reserves only the unmatched suffix on a prefix hit, but
         # cache contents churn before this request reaches the head of the
         # queue — validate against the cold-start worst case
         need = self._pages_needed(req)
         if need > self.n_pages:
-            raise ValueError(
+            raise RequestTooLarge(
                 f"request needs {need} pages but the pool has only "
                 f"{self.n_pages} (raise max_pages or shrink the request)")
         self.queue.append(req)
         return RequestHandle(req, self)
 
-    def cancel(self, handle_or_uid) -> bool:
+    def cancel(self, handle_or_uid, *,
+               error: Optional[Exception] = None) -> bool:
         """Stop a request and release what it holds.  Queued: dequeued
-        before it ever takes pages.  Admitted: its slot is freed and its
-        page references dropped — shared prefix pages survive for siblings
-        and for the cache (refcounted), its own indexed prompt pages stay
+        before it ever takes pages (a preempted request's parked host pages
+        are dropped with it).  Admitted: its slot is freed and its page
+        references dropped — shared prefix pages survive for siblings and
+        for the cache (refcounted), its own indexed prompt pages stay
         resident as cache, and everything else returns to the free list.
-        Returns False (no-op) for finished or unknown requests."""
+        Returns False (no-op) for finished or unknown requests.
+
+        ``error`` marks an ENGINE-initiated abort (fault injection, an
+        administrative kill): it lands on the request record and is raised
+        by ``result()``/``tokens()``.  A client ``handle.cancel()`` passes
+        no error and keeps the historical partial-return contract."""
         uid = int(handle_or_uid)
         for i, req in enumerate(self.queue):
             if req.uid == uid:
                 del self.queue[i]
-                req.cancelled = req.done = True
-                self._stats["cancelled"] += 1
+                self._drop_park_record(uid)
+                self._finish_cancel(req, error)
                 return True
         for b, s in enumerate(self.slots):
             if s is not None and s.req.uid == uid:
-                s.req.cancelled = s.req.done = True
+                self._finish_cancel(s.req, error)
                 self._release_slot(b)
-                self._stats["cancelled"] += 1
                 return True
         return False
+
+    def _finish_cancel(self, req: Request,
+                       error: Optional[Exception]) -> None:
+        req.cancelled = req.done = True
+        if error is not None:
+            if hasattr(error, "tokens") and not error.tokens:
+                error.tokens = list(req.out_tokens)
+            req.error = error
+        self._stats["cancelled"] += 1
+
+    def _drop_park_record(self, uid: int) -> None:
+        """Forget a preempted request's park (cancel / deadline / drain):
+        free its host slots and, since hevicts need no device state, drain
+        them right away when nothing else is pending."""
+        rec = self._preempted.pop(uid, None)
+        if rec is None or rec["slots"] is None:
+            return
+        self.pool.drop_parked(rec["slots"])
+        if self.pool.events and all(
+                ev[0] == "hevict" for ev in self.pool.events):
+            for ev in self.pool.drain_events():
+                self._host_store.pop(ev[1], None)
 
     @property
     def stats(self) -> Dict:
@@ -563,13 +694,23 @@ class ServeEngine:
                 f"{order!r} for a {n}-deep queue")
         return [view.queue[i] for i in order]
 
-    def _admit(self, state):
+    def _admit_round(self, state):
         """Admit scheduler-ordered queue candidates into free slots while
         the pages each actually needs — its unmatched suffix, after the
         longest-cached-prefix match — fit in free + evictable pages (no
         mid-flight OOM, no starving the admission round on pages a prefix
         hit would never use).  FIFO order reproduces the PR 1-4 strict
-        head-of-line behavior bit for bit."""
+        head-of-line behavior bit for bit.
+
+        A PREEMPTED candidate (a ``_preempted`` record exists) re-admits
+        one of two ways: its park promotes back — trie pages cover the
+        front, unparked pages the middle, fresh pages the tail, and decode
+        resumes at the recorded position on the next tick — or, when the
+        park was lost or the cached prefix shrank beneath it, it
+        re-prefills its replayed history (``_Slot.prefill_tokens``) and
+        resumes from its last generated token.  Either way the transcript
+        continues token-identically (per-(request, ordinal) seeded
+        sampling)."""
         if not self.queue or all(s is not None for s in self.slots):
             return state  # nothing to admit: the policy is not consulted
         mask = np.zeros(self.B, bool)
@@ -598,18 +739,38 @@ class ServeEngine:
                 if ci >= len(cands):
                     continue
                 req = cands[ci]
+            rec = self._preempted.get(req.uid)
             node, mpages, matched, cow = self.pool.match_prefix(req.prompt)
+            if rec is not None:
+                cow = None  # a resumed request never COWs: its coverage is
+                # already decided by the park or its own replayed history
             # a HOST-tier hit is the third candidate class between warm and
             # cold: the pages are matchable but each costs one device page
             # to promote, so they count as demand, not as supply
             n_host = sum(1 for p in mpages if self.pool.is_host(p))
-            need = self._pages_needed(req, matched_pages=len(mpages))
+            parked = rec["slots"] if rec is not None else None
+            resume_hit = (parked is not None
+                          and len(mpages) >= rec["page0"])
+            if resume_hit:
+                # promote-resume: trie pages cover [0, mp), the park covers
+                # [page0, page0+len(parked)) — drop the overlap (the trie's
+                # copy wins: no promotion copy for pages both tiers hold),
+                # unpark the rest, allocate out to the full footprint
+                mp = len(mpages)
+                keep = parked[mp - rec["page0"]:]
+                ncover = rec["page0"] + len(parked)
+                need = -(-(len(req.prompt) + req.max_tokens)
+                         // self.page_size) - ncover
+                demand = need + len(keep) + n_host
+            else:
+                need = self._pages_needed(req, matched_pages=len(mpages))
+                demand = need + n_host
             if cow is not None and need + n_host > self.pool.available(
                     mpages + [cow[0]]):
                 cow = None  # pinning the COW source would leave the pool
                 # short one page: forgo the partial-page reuse (it is an
                 # optimization; the full-page match alone always fits)
-            if need + n_host > self.pool.available(mpages):
+            if demand > self.pool.available(mpages):
                 break  # stop at the first infeasible candidate: the pool's
                 # reservation discipline outranks any policy's ordering
             if cands is None:
@@ -622,6 +783,46 @@ class ServeEngine:
             if n_host:
                 self._stats["host_hits"] += 1
                 self._stats["host_pages_promoted"] += n_host
+            if rec is not None:
+                self._preempted.pop(req.uid)
+                self._stats["resumes"] += 1
+            if resume_hit:
+                if len(keep) < len(parked):
+                    self.pool.drop_parked(parked[:len(parked) - len(keep)])
+                pages = mpages + self.pool.unpark(keep) \
+                    + self.pool.alloc(need)
+                rows[b, :len(pages)] = pages
+                plen[b] = rec["pos"]
+                self.slots[b] = _Slot(
+                    req, pages, fill=len(req.prompt), pos=rec["pos"],
+                    last_tok=rec["last_tok"], node=node,
+                    n_indexed=len(mpages),
+                    # the unpark scatters overlap this tick's compute,
+                    # exactly like a host-tier prefix promotion
+                    ready_tick=self._stats["ticks"] + 1)
+                mask[b] = True
+                self._stats["admissions"] += 1
+                self._stats["resume_park_hits"] += 1
+                if matched:
+                    self._stats["prefix_hits"] += 1
+                    self._stats["prefix_tokens_reused"] += matched
+                continue
+            ptoks, rtok = req.prompt, None
+            if rec is not None:
+                # park lost (or a hole opened between the trie match and
+                # the park): abandon what is left and RE-PREFILL the
+                # request's replayed history — prompt, the position-L
+                # handoff duplicate, then every generated token but the
+                # last, whose turn as decode input comes at resume.  Its
+                # length IS the preempted write position, so the handoff
+                # below lands exactly where the uninterrupted run was.
+                if parked is not None:
+                    self.pool.drop_parked(parked)
+                ptoks = np.concatenate(
+                    [req.prompt, req.prompt[-1:],
+                     np.asarray(req.out_tokens[:-1], np.int32)])
+                rtok = int(rec["last_tok"])
+                self._stats["resume_reprefills"] += 1
             if cow is not None:
                 self.pool.share([cow[0]])  # pin the COW source vs eviction
                 cow_pins.append(cow[0])
@@ -635,15 +836,16 @@ class ServeEngine:
             plen[b] = matched
             s = _Slot(req, pages, fill=matched, node=node,
                       n_indexed=len(mpages),
+                      prefill_tokens=ptoks, resume_tok=rtok,
                       # a promotion's scatter overlaps this tick's compute:
                       # hold the slot out of the pack until the next tick
                       ready_tick=(self._stats["ticks"] + 1 if n_host
                                   else self._stats["ticks"]))
-            if matched >= len(req.prompt):
+            if matched >= len(ptoks):
                 # whole prompt cached: straight to decode, same resume
                 # scheme as a completed prefill (last token, position L)
-                s.pos = len(req.prompt)
-                s.last_tok = int(req.prompt[-1])
+                s.pos = len(ptoks)
+                s.last_tok = int(ptoks[-1])
             self.slots[b] = s
             mask[b] = True
             self._stats["admissions"] += 1
@@ -669,6 +871,186 @@ class ServeEngine:
             state = self._reset(state, self._template, mask, rows, plen)
         return state
 
+    # -- preemption -------------------------------------------------------
+    def _admit(self, state):
+        """Admission with a preemption backstop: when a round leaves the
+        head candidate stalled on pages (or a slot) that IN-FLIGHT work
+        holds, and the candidate STRICTLY outranks a running victim, the
+        victim is preempted and the round re-runs.  Strict priority is the
+        anti-thrash rule — equal classes never preempt each other, so two
+        starved peers cannot swap one slot forever; it also means the
+        default priority-0 world never preempts at all, keeping the PR 1-8
+        behavior bit-identical unless the workload opts into classes."""
+        if self._chaos_alloc_fail:
+            return state  # injected allocation failure: the tick admits
+            # nothing (and preempts nothing — a fault starves progress,
+            # never correctness)
+        state = self._admit_round(state)
+        if not self.preempt:
+            return state
+        for _ in range(self.B):  # each pass frees one slot at most
+            cand = self._stalled_candidate()
+            if cand is None:
+                break
+            b = self._pick_victim(cand)
+            if b is None:
+                break
+            state = self._preempt_slot(b, state)
+            state = self._admit_round(state)
+        return state
+
+    def _stalled_candidate(self) -> Optional[Request]:
+        """The first admission candidate left in the queue after a round —
+        the request a preemption would be FOR.  None when the queue is
+        empty (a non-empty queue after a round means the round could not
+        place its head: no free slot, or infeasible page demand)."""
+        if not self.queue:
+            return None
+        if self._default_admit:
+            return self.queue[0]
+        cands = self._admission_candidates()
+        return cands[0] if cands else None
+
+    def _pick_victim(self, cand: Request) -> Optional[int]:
+        """A decoding slot whose preemption would let ``cand`` admit.
+
+        Eligible victims decode (mid-prefill work is all still prompt —
+        nothing worth parking) and strictly UNDERRANK the candidate; the
+        policy's ``preempt_order`` ranks them (and may exempt slots — Slo
+        policies drop the interactive class entirely); the first ranked
+        victim whose freed pages close the candidate's gap wins.  The
+        priority filter runs before any EngineView is built, so workloads
+        that never use classes pay O(batch) per stalled tick, not
+        O(queue)."""
+        tick = self._stats["ticks"]
+        victims = [b for b, s in enumerate(self.slots)
+                   if s is not None and s.ready_tick <= tick
+                   and s.fill >= len(s.prefill_tokens)
+                   and s.req.priority < cand.priority]
+        if not victims:
+            return None
+        po = getattr(self.scheduler, "preempt_order", None)
+        view = self._view()
+        order = list(po(view, victims) if po is not None
+                     else Scheduler.preempt_order(self.scheduler, view,
+                                                  victims))
+        if len(set(order)) != len(order) or any(
+                b not in victims for b in order):
+            raise ValueError(
+                f"{self.scheduler_name}: preempt_order returned {order!r} "
+                f"for victims {victims}")
+        for b in order:
+            if self._admits_after(cand, self.slots[b]):
+                return b
+        return None
+
+    def _admits_after(self, req: Request, s: _Slot) -> bool:
+        """Would preempting ``s`` make ``req`` admissible?  Counts only
+        the pages the victim holds as SOLE owner (shared prefix pages
+        survive its release) against the candidate's demand, probed
+        without touching LRU state.  Slightly conservative — never
+        optimistic enough to preempt a victim for nothing."""
+        _, mpages, _ = self.pool._walk_full_pages(req.prompt, touch=False)
+        gain = sum(1 for p in s.pages if self.pool.ref(p) == 1)
+        n_host = sum(1 for p in mpages if self.pool.is_host(p))
+        rec = self._preempted.get(req.uid)
+        if (rec is not None and rec["slots"] is not None
+                and len(mpages) >= rec["page0"]):
+            keep = len(rec["slots"]) - (len(mpages) - rec["page0"])
+            ncover = rec["page0"] + len(rec["slots"])
+            demand = (-(-(len(req.prompt) + req.max_tokens)
+                        // self.page_size) - ncover) + keep + n_host
+        else:
+            demand = self._pages_needed(
+                req, matched_pages=len(mpages)) + n_host
+        return demand <= self.pool.available(mpages) + gain
+
+    def _preempt_slot(self, b: int, state):
+        """Preempt decoding slot ``b``: park its private pages (the
+        coverage of positions [0, pos) beyond its indexed prefix) to the
+        host tier, release the rest, and requeue the request AT THE HEAD
+        with its generated tokens intact.  The park's demote gathers apply
+        immediately — the freed device pages may be reallocated by the
+        very next admission round."""
+        s = self.slots[b]
+        req = s.req
+        ncover = -(-s.pos // self.page_size)
+        ps = s.n_indexed
+        if req.out_tokens:
+            parked = self.pool.park(s.pages[ps:ncover])
+            self._preempted[req.uid] = {
+                "slots": parked, "page0": ps, "pos": s.pos,
+                "last_tok": s.last_tok}
+            if parked is not None:
+                self._stats["preempt_pages_parked"] += len(parked)
+                self.pool.release(s.pages[:ps] + s.pages[ncover:])
+            else:
+                self.pool.release(s.pages)  # host tier absent or full:
+                # the record alone still resumes via re-prefill
+        else:
+            # nothing generated yet: a plain requeue re-admits through the
+            # normal path (its prompt pages stay cached for the re-prefill)
+            self.pool.release(s.pages)
+        self.slots[b] = None
+        self.queue.appendleft(req)
+        self._stats["preemptions"] += 1
+        return self._apply_pool_events(state)
+
+    # -- deadlines / fault injection --------------------------------------
+    def _expire_deadlines(self) -> None:
+        """Abort every queued or live request whose deadline tick has
+        passed: a typed ``DeadlineExceeded`` (partial output attached)
+        lands on the request record, raised by its handle's
+        ``result()``/``tokens()``.  Parked state is dropped — an expired
+        request never resumes."""
+        tick = self._stats["ticks"]
+
+        def expire(req: Request) -> None:
+            req.error = DeadlineExceeded(
+                f"request {req.uid} missed its deadline "
+                f"(tick {tick} >= {req.deadline_tick})",
+                tokens=req.out_tokens)
+            req.done = True
+            self._stats["deadline_expired"] += 1
+
+        for req in [r for r in self.queue
+                    if r.deadline_tick is not None
+                    and tick >= r.deadline_tick]:
+            self.queue.remove(req)
+            self._drop_park_record(req.uid)
+            expire(req)
+        for b, s in enumerate(self.slots):
+            if (s is not None and s.req.deadline_tick is not None
+                    and tick >= s.req.deadline_tick):
+                self._release_slot(b)
+                expire(s.req)
+
+    def _chaos_tick(self) -> bool:
+        """Draw and apply this tick's injected faults (deterministic in
+        (seed, tick) — see ``serve.chaos.FaultInjector``).  Returns True
+        for a STALLED tick: the engine does nothing but let the clock —
+        and with it every deadline — advance."""
+        live = ([s.req.uid for s in self.slots if s is not None]
+                + [r.uid for r in self.queue])
+        f = self.fault_injector.faults(self._stats["ticks"], live)
+        if f.get("cancel") is not None:
+            from repro.serve.errors import Cancelled
+
+            if self.cancel(f["cancel"], error=Cancelled(
+                    f"request {f['cancel']} cancelled by fault injection")):
+                self._stats["chaos_cancels"] += 1
+        if f.get("evict_storm"):
+            self.pool.storm_host_cache()
+            self._state = self._apply_pool_events(self._state)
+            self._stats["chaos_evict_storms"] += 1
+        if f.get("alloc_fail"):
+            self._chaos_alloc_fail = True
+            self._stats["chaos_alloc_fails"] += 1
+        if f.get("stall"):
+            self._stats["chaos_stalled_ticks"] += 1
+            return True
+        return False
+
     # -- slot lifecycle ---------------------------------------------------
     def _release_slot(self, b: int) -> None:
         s = self.slots[b]
@@ -683,11 +1065,14 @@ class ServeEngine:
         equivalent page already exists — then the existing page keeps
         ownership of the prefix and this slot's private duplicate simply
         never enters the index (freed at completion).  Decode tokens never
-        advance ``fill``, so generated pages are never indexed."""
+        advance ``fill``, so generated pages are never indexed — and a
+        preempt-resume re-prefill, whose ``prefill_tokens`` replay history
+        PAST the prompt, caps indexing at the pure-prompt pages."""
         if s.node is None or not self.prefix_cache:
             return
         P = self.page_size
-        while (s.n_indexed + 1) * P <= s.fill:
+        limit = min(s.fill, len(s.req.prompt))
+        while (s.n_indexed + 1) * P <= limit:
             j = s.n_indexed
             key = tuple(int(t) for t in s.req.prompt[j * P:(j + 1) * P])
             s.node = self.pool.index_page(s.node, key, s.pages[j])
@@ -778,10 +1163,10 @@ class ServeEngine:
         tick = self._stats["ticks"]
         ready = [b for b, s in enumerate(self.slots)
                  if s is not None and s.ready_tick <= tick
-                 and s.fill >= len(s.req.prompt)]
+                 and s.fill >= len(s.prefill_tokens)]
         filling = [b for b, s in enumerate(self.slots)
                    if s is not None and s.ready_tick <= tick
-                   and s.fill < len(s.req.prompt)]
+                   and s.fill < len(s.prefill_tokens)]
         if self._default_pack:
             decode_order, prefill_order = ready, filling
         else:
@@ -809,9 +1194,9 @@ class ServeEngine:
             if n >= T:
                 break
             s = self.slots[b]
-            L = len(s.req.prompt)
+            L = len(s.prefill_tokens)
             c = min(self.chunk, L - s.fill, T - n)
-            tokens[n:n + c] = s.req.prompt[s.fill:s.fill + c]
+            tokens[n:n + c] = s.prefill_tokens[s.fill:s.fill + c]
             slot[n:n + c] = b
             q_pos[n:n + c] = s.fill + np.arange(c)
             seq_idx[n:n + c] = np.arange(c)
@@ -822,8 +1207,12 @@ class ServeEngine:
             if s.fill >= L:
                 # decode resumes from the last prompt token at position L
                 # (same scheme as the reference engine, for token identity)
+                # — or, for a re-prefilled preemptee, from its last
+                # generated token at its preempted position (L here is the
+                # replayed-history length, which IS that position)
                 s.pos = L
-                s.last_tok = int(s.req.prompt[-1])
+                s.last_tok = (s.resume_tok if s.resume_tok is not None
+                              else int(s.prefill_tokens[-1]))
                 if n < T:
                     tokens[n] = s.last_tok
                     slot[n] = b
@@ -939,18 +1328,19 @@ class ServeEngine:
         for b, s in enumerate(self.slots):
             if s is None:
                 continue
-            L = len(s.req.prompt)
+            L = len(s.prefill_tokens)
             if s.fill >= L:
                 continue
             n = min(C, L - s.fill)
-            tokens[b, :n] = s.req.prompt[s.fill:s.fill + n]
+            tokens[b, :n] = s.prefill_tokens[s.fill:s.fill + n]
             q_pos[b] = s.fill + np.arange(C)
             valid[b, :n] = True
             s.fill += n
             self._index_filled_pages(s)
             if s.fill >= L:
                 s.pos = L
-                s.last_tok = int(s.req.prompt[-1])
+                s.last_tok = (s.resume_tok if s.resume_tok is not None
+                              else int(s.prefill_tokens[-1]))
         _, state = self._chunk_step(self.params, state, tokens, q_pos, valid)
         self._stats["chunk_ticks"] += 1
         return state
@@ -1038,8 +1428,20 @@ class ServeEngine:
         serving instead of draining a batch."""
         with self._ctx():
             self._ensure_state()
+            self._expire_deadlines()
+            self._chaos_alloc_fail = False
+            if self.fault_injector is not None and self._chaos_tick():
+                # stalled tick: the clock advanced, nothing ran
+                self._stats["ticks"] += 1
+                self.tick_log.append((False, time.perf_counter()))
+                return {}
+            if self.pool.events:
+                # expiry / cancellation may have dropped parked pages with
+                # no admission round behind them to drain the hevicts
+                self._state = self._apply_pool_events(self._state)
             self._state = self._admit(self._state)
-            had_prefill = any(s is not None and s.fill < len(s.req.prompt)
+            had_prefill = any(s is not None
+                              and s.fill < len(s.prefill_tokens)
                               for s in self.slots)
             results: Dict[int, List[int]] = {}
             if self.ragged:
@@ -1070,6 +1472,7 @@ class ServeEngine:
                 self._release_slot(b)
         while self.queue:
             req = self.queue.popleft()
+            self._drop_park_record(req.uid)
             req.done = True
             results[req.uid] = req.out_tokens
         return results

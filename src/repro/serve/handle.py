@@ -22,7 +22,13 @@ streaming surface:
   cancelled request's own indexed prompt pages stay resident as cache.
 - ``handle.done`` / ``handle.result()`` — completion flag and a blocking
   drain (ticks until this request finishes; other requests make progress
-  on the same ticks).
+  on the same ticks).  ``result(timeout_ticks=)`` bounds the drain, and
+  engine-side aborts surface as TYPED exceptions (``serve.errors``): a
+  request whose ``deadline_ticks`` elapsed raises ``DeadlineExceeded``, a
+  fault-injected/administrative abort raises ``Cancelled`` — never a hang,
+  never a silently-truncated token list.  A CLIENT-initiated
+  ``handle.cancel()`` keeps the historical contract: ``result()`` returns
+  the partial output.
 
 See ``examples/serve_stream.py`` for the end-to-end streaming client,
 including the cancel-on-timeout pattern.
@@ -52,6 +58,15 @@ class Request:
     # first; priority >= 1 is the interactive class, 0 the batch default
     priority: int = 0
     cancelled: bool = False
+    # absolute engine tick by which the request must COMPLETE (None = no
+    # deadline); set by ``submit(deadline_ticks=)`` relative to the tick
+    # counter at submission.  An expired request aborts with a typed
+    # ``DeadlineExceeded`` recorded in ``error``.
+    deadline_tick: Optional[int] = None
+    # engine-side abort cause (serve.errors.DeadlineExceeded / Cancelled);
+    # raised by RequestHandle.result()/tokens().  None for normal
+    # completion and for client-initiated cancels.
+    error: Optional[Exception] = None
 
 
 class RequestHandle(int):
@@ -108,13 +123,17 @@ class RequestHandle(int):
         ``submit()`` — every tick advances ALL live requests, and the
         iterator replays tokens emitted while it wasn't being consumed.
         Stops at ``done`` (EOS / max_tokens / cancel); ``max_ticks`` bounds
-        the total engine ticks this iterator may drive."""
+        the total engine ticks this iterator may drive.  An engine-side
+        abort (deadline expiry, fault-injected cancel) raises its typed
+        cause (``serve.errors``) after the partial tokens were yielded."""
         i = 0
         while True:
             while i < len(self._req.out_tokens):
                 yield self._req.out_tokens[i]
                 i += 1
             if self._req.done:
+                if self._req.error is not None:
+                    raise self._req.error
                 return
             if max_ticks <= 0:
                 raise TimeoutError(
@@ -123,10 +142,19 @@ class RequestHandle(int):
             self._engine.tick()
             max_ticks -= 1
 
-    def result(self, max_ticks: int = 65536) -> List[int]:
+    def result(self, max_ticks: int = 65536, *,
+               timeout_ticks: Optional[int] = None) -> List[int]:
         """Drain until this request is done; returns its generated tokens
-        (the partial list if it was cancelled)."""
-        for _ in self.tokens(max_ticks=max_ticks):
+        (the partial list if it was cancelled by ``handle.cancel()``).
+
+        ``timeout_ticks`` bounds the drain: if the engine hasn't finished
+        this request within that many ticks (stalled, overloaded, or simply
+        never admitting it), ``TimeoutError`` is raised instead of blocking
+        indefinitely.  Engine-side aborts raise their typed cause
+        (``serve.errors.DeadlineExceeded`` / ``Cancelled``), each carrying
+        the partial output on ``.tokens``."""
+        budget = timeout_ticks if timeout_ticks is not None else max_ticks
+        for _ in self.tokens(max_ticks=budget):
             pass
         return list(self._req.out_tokens)
 

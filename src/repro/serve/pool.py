@@ -16,7 +16,8 @@ set stays resident in the fast tier while the cold set lives one tier down.
 The pool reproduces that hierarchy for the KV prefix cache: the DEVICE tier
 is ``n_pages`` of fast pool memory, and an optional HOST tier
 (``host_pages`` slots of host RAM) catches what pressure pushes out.  The
-page lifecycle becomes alloc → (release) → demote → promote → free:
+full page lifecycle is alloc → (release) → demote → promote → **preempt
+(park) → resume (unpark)** → free:
 
 - **Demotion** — under allocation pressure, the LRU refcount-0 device node
   with no device children moves its page to a host slot instead of being
@@ -33,12 +34,27 @@ page lifecycle becomes alloc → (release) → demote → promote → free:
 - **Host eviction** — the host tier is itself finite: making room for a
   demotion drops the LRU childless host node (("hevict", slot) event).
   Only when BOTH tiers miss does a request pay full re-prefill.
+- **Preemption (park / unpark)** — when the engine preempts a decoding
+  slot under pressure, the victim's PRIVATE pages (non-indexed,
+  refcount-1: generated-token pages and prompt duplicates — pages the trie
+  would never cache) are PARKED: their bytes move to host slots via the
+  same ("demote", page, slot) event machinery, but the slots are pinned in
+  ``_parked`` rather than entering the trie — cache traffic can never
+  evict a live request's swapped-out state.  ``unpark`` is the resume
+  mirror: one device page per parked slot, ("promote", slot, page) events,
+  and the host slots return to the cache's free list.  ``drop_parked``
+  abandons a park (cancel, deadline expiry, chaos storm) with ("hevict",
+  slot) events.  All-or-nothing: ``park`` returns None rather than a
+  partial park — a resume needs contiguous coverage or none.
 
-Host-tier pages carry no refcounts (the host tier is a pure cache; live
-requests only ever hold device pages) and are named by ENCODED ids
-``n_pages + slot`` wherever they appear in match results, so the device
-region of the trie stays prefix-closed: every ancestor of a device page is
-a device page, which is what lets a matched chain promote root-first.
+Host-tier CACHE pages carry no refcounts (the cache tier holds only
+refcount-0 trie pages; live requests only ever hold device pages) and are
+named by ENCODED ids ``n_pages + slot`` wherever they appear in match
+results, so the device region of the trie stays prefix-closed: every
+ancestor of a device page is a device page, which is what lets a matched
+chain promote root-first.  PARKED slots are the one host-tier occupant
+outside the trie: invisible to matching and host eviction, owned by
+exactly one preempted request until unparked or dropped.
 
 The pool is pure host-side bookkeeping over integer page ids: it never sees
 a model, an array of KV data, or a device — which is what makes it
@@ -66,6 +82,9 @@ Interface (all O(pages) or better, no jax imports):
 - ``probe_prefix_len(prompt)`` / ``probe_prefix_split(prompt)`` —
   non-mutating trie walks (no LRU touch) for schedulers ranking queued
   requests by expected reuse, totalled or split (device, host).
+- ``park(pages)`` / ``unpark(slots)`` / ``drop_parked(slots)`` — the
+  preemption swap: move a victim slot's private pages to pinned host
+  slots, bring them back on resume, or abandon them.
 - ``evict_one()`` / ``drop_cache()`` / ``available(pinned)`` — reclamation
   and admission-supply accounting; ``drain_events()`` hands the engine the
   chronological demote/promote/hevict log to apply to device state.
@@ -168,11 +187,19 @@ class PagePool:
         self._host_free: List[int] = list(range(self.host_pages))
         self._host_node: Dict[int, _PrefixNode] = {}
         self._host_pinned: set = set()  # slots mid-promotion: not evictable
+        # host slots holding a PREEMPTED request's parked pages: outside the
+        # trie (not matchable), never host-evictable — live-request state
+        # outranks cache.  Freed only by unpark (resume) or drop_parked.
+        self._parked: set = set()
         # chronological demote/promote/hevict log for the engine to apply
         # to device state (``drain_events``)
         self.events: List[tuple] = []
         self.stats = {"evictions": 0, "demotions": 0, "promotions": 0,
-                      "host_evictions": 0}
+                      "host_evictions": 0,
+                      # preemption swap traffic: pages parked device->host,
+                      # unparked host->device, and parks abandoned
+                      "park_demotions": 0, "park_promotions": 0,
+                      "parks_dropped": 0}
 
     # -- introspection ----------------------------------------------------
     @property
@@ -203,6 +230,11 @@ class PagePool:
     @property
     def host_free_slots(self) -> int:
         return len(self._host_free)
+
+    @property
+    def parked_pages(self) -> int:
+        """Host slots holding preempted requests' parked pages."""
+        return len(self._parked)
 
     def is_host(self, page: int) -> bool:
         """True for an encoded host-tier page id (``n_pages + slot``)."""
@@ -324,6 +356,86 @@ class PagePool:
             self._host_pinned -= pending
         return out
 
+    # -- preemption swap (park / unpark) ----------------------------------
+    def park(self, pages: Sequence[int]) -> Optional[List[int]]:
+        """Swap a preempted slot's PRIVATE pages out to pinned host slots.
+
+        Each page must be refcount-1 and non-indexed (the victim slot is
+        its sole owner — generated-token pages and prompt duplicates; the
+        victim's indexed prefix pages are simply ``release``d instead and
+        stay matchable as cache).  Emits the same ("demote", page, slot)
+        events as cache demotion, so the engine's event drain moves the
+        bytes with the machinery it already has; the slots land in
+        ``_parked`` — never in the trie — so neither matching nor host
+        eviction can touch them until ``unpark``/``drop_parked``.
+
+        ALL-OR-NOTHING: returns the host slot list (parallel to ``pages``),
+        or ``None`` without side effects when the host tier is absent or
+        cannot take every page — a resume needs contiguous coverage, so a
+        partial park is worth nothing.  Making room may hevict cached host
+        nodes (live-request state outranks the pure cache)."""
+        pages = list(pages)
+        if not pages:
+            return []
+        if self.host_pages == 0:
+            return None
+        # conservative capacity probe: free slots + currently-evictable
+        # cache nodes (evictions can only expose more candidates)
+        cap = len(self._host_free) + sum(
+            1 for s, nd in self._host_node.items()
+            if s not in self._host_pinned and not nd.children)
+        if cap < len(pages):
+            return None
+        slots: List[int] = []
+        for p in pages:
+            assert self._ref[p] == 1 and p not in self._page_node, \
+                f"park of a shared or indexed page {p}"
+            slot = self._host_slot_for_demote()
+            assert slot is not None, "capacity probe admitted a full tier"
+            self.events.append(("demote", p, slot))
+            self._ref[p] -= 1
+            self._free.append(p)
+            self._parked.add(slot)
+            slots.append(slot)
+        self.stats["park_demotions"] += len(slots)
+        return slots
+
+    def unpark(self, slots: Sequence[int]) -> List[int]:
+        """Resume a park: allocate one device page per parked slot and emit
+        ("promote", slot, page) events for the engine to scatter the bytes
+        back.  Returned pages carry refcount 1 (the resumed slot owns
+        them); the host slots return to the cache's free list.  Callers
+        gate on ``available()`` for the whole resume demand first, exactly
+        like admission."""
+        out: List[int] = []
+        for slot in slots:
+            assert slot in self._parked, f"unpark of a non-parked slot {slot}"
+            # alloc BEFORE freeing the slot: an eviction this alloc triggers
+            # then cannot demote into a slot whose bytes are still pending
+            # promotion (chronological event order handles later reuse)
+            (dev,) = self.alloc(1)
+            self.events.append(("promote", slot, dev))
+            self._parked.discard(slot)
+            self._host_free.append(slot)
+            out.append(dev)
+        self.stats["park_promotions"] += len(out)
+        return out
+
+    def drop_parked(self, slots: Sequence[int]) -> None:
+        """Abandon a park (cancel, deadline expiry, chaos eviction storm):
+        the host slots free and ("hevict", slot) events tell the engine to
+        discard the bytes.  The preempted request can still resume — it
+        re-prefills from its own token history instead of promoting."""
+        n = 0
+        for slot in slots:
+            if slot not in self._parked:
+                continue
+            self._parked.discard(slot)
+            self._host_free.append(slot)
+            self.events.append(("hevict", slot))
+            n += 1
+        self.stats["parks_dropped"] += n
+
     # -- prefix index -----------------------------------------------------
     @property
     def root(self) -> _PrefixNode:
@@ -422,6 +534,23 @@ class PagePool:
         self._clock += 1
         child.last_used = self._clock
         return child
+
+    def storm_host_cache(self) -> int:
+        """Chaos hook: hevict EVERY evictable host cache node (leaf-first,
+        until none remain).  Parked slots and pinned (mid-promotion) nodes
+        survive — a storm models cache-tier loss, and live-request state is
+        not cache.  Returns the number of slots dropped."""
+        n = 0
+        progress = True
+        while progress:
+            progress = False
+            for slot, nd in list(self._host_node.items()):
+                if slot in self._host_pinned or nd.children:
+                    continue
+                self._hevict(nd)
+                n += 1
+                progress = True
+        return n
 
     # -- eviction / demotion ----------------------------------------------
     def evict_one(self) -> bool:

@@ -12,8 +12,17 @@ policy inherits the no-mid-flight-OOM and one-trace guarantees.
 
 A scheduler sees a read-only ``EngineView`` snapshot and returns ORDERINGS;
 the engine keeps all mechanism (feasibility checks, page reservation,
-chunking, budget accounting).  Two invariants the engine enforces no matter
-the policy:
+chunking, budget accounting).  Since the preemption PR the protocol has a
+fourth consultation, ``preempt_order``: when admission cannot make progress
+because IN-FLIGHT requests exhaust the pool (not merely a deep queue), the
+engine asks the policy to rank candidate victim slots; the engine then
+preempts the first victim whose release actually makes the stalled head
+admissible (pages park to the host tier, the request re-queues and later
+resumes token-identically — all mechanism, all engine-side).  The default
+ranking is lowest priority first, then youngest; ``SloScheduler`` and
+``ClassThenFamilyScheduler`` additionally refuse to victimize the
+interactive class (priority >= 1) entirely — batch work is what soaks up
+preemption.  Two invariants the engine enforces no matter the policy:
 
 - **Admission stops at the first infeasible candidate** — a request is
   admitted only when the pages it actually needs (its unmatched suffix
@@ -132,6 +141,16 @@ class Scheduler:
     def prefill_order(self, view: EngineView,
                       filling: Sequence[int]) -> Sequence[int]:
         return filling
+
+    def preempt_order(self, view: EngineView,
+                      victims: Sequence[int]) -> Sequence[int]:
+        """Rank candidate victim slots for preemption (best victim first);
+        return a subsequence to EXEMPT slots (an omitted slot is never
+        victimized).  Default: lowest ``Request.priority`` first, youngest
+        (highest uid) within a class — cheap work lost, old work kept."""
+        return sorted(victims,
+                      key=lambda b: (view.slot_requests[b].priority,
+                                     -view.slot_requests[b].uid))
 
 
 class FifoScheduler(Scheduler):
@@ -279,6 +298,15 @@ class SloScheduler(_BoundedReorderScheduler):
         return sorted(filling,
                       key=lambda b: (-view.slot_requests[b].priority, b))
 
+    def preempt_order(self, view: EngineView,
+                      victims: Sequence[int]) -> Sequence[int]:
+        """Batch slots only, youngest first — the interactive class
+        (priority >= 1) is NEVER victimized: preempting it would trade the
+        latency SLO this policy exists to protect for batch throughput."""
+        batch = [b for b in victims if view.slot_requests[b].priority < 1]
+        return sorted(batch, key=lambda b: (view.slot_requests[b].priority,
+                                            -view.slot_requests[b].uid))
+
 
 class ClassThenFamilyScheduler(_BoundedReorderScheduler):
     """Composite policy: SLO class FIRST, prefix-family grouping WITHIN a
@@ -316,6 +344,13 @@ class ClassThenFamilyScheduler(_BoundedReorderScheduler):
                       filling: Sequence[int]) -> Sequence[int]:
         return sorted(filling,
                       key=lambda b: (-view.slot_requests[b].priority, b))
+
+    def preempt_order(self, view: EngineView,
+                      victims: Sequence[int]) -> Sequence[int]:
+        """SloScheduler's rule: batch only, never the interactive class."""
+        batch = [b for b in victims if view.slot_requests[b].priority < 1]
+        return sorted(batch, key=lambda b: (view.slot_requests[b].priority,
+                                            -view.slot_requests[b].uid))
 
 
 def prompt_lookup_draft(history, k: int, *, ngram_max: int = 3,
@@ -375,6 +410,10 @@ class SpeculativeScheduler(Scheduler):
     def prefill_order(self, view: EngineView,
                       filling: Sequence[int]) -> Sequence[int]:
         return self.inner.prefill_order(view, filling)
+
+    def preempt_order(self, view: EngineView,
+                      victims: Sequence[int]) -> Sequence[int]:
+        return self.inner.preempt_order(view, victims)
 
     def draft(self, history, k: int) -> List[int]:
         """Draft chain for one slot: at most min(k, spec_k) tokens."""

@@ -29,7 +29,11 @@ out to host RAM, promotion scatters them back into a freshly allocated
 device page.  Both take the page id as DATA (one trace each for the
 engine's lifetime), and the insert is jitted with the state donated — same
 contracts as the COW copy, so tiering never perturbs the serve-path trace
-count or the no-copy hot loop.
+count or the no-copy hot loop.  PREEMPTION rides the same two movers: a
+victim's private pages PARK via the demotion gather and resume UNPARKS
+them via the promotion insert — swap-to-host adds zero new programs, only
+pool bookkeeping (``PagePool.park`` / ``unpark``), so ``stats["traces"]``
+stays 1 through preempt/resume cycles too.
 
 SPECULATIVE decoding is, by the same argument, just a packing policy: the
 drafter proposes k continuation tokens for a decoding slot and the engine

@@ -1,0 +1,232 @@
+"""Fault-injection chaos harness: FaultInjector determinism (a fault
+schedule is a pure function of (seed, tick) — replayable, consultation- and
+liveness-order independent), engine runs under injected alloc failures /
+random cancels / host eviction storms / stalled ticks that stay leak-free
+on both tiers with typed abort causes, and the property-based acceptance
+gate: random submit / preempt / resume / cancel / deadline interleavings —
+speculation off AND on — drain to zero leaked pages with every COMPLETED
+request's transcript identical to an unpressured reference.  The happy-path
+preemption tests live in tests/test_preemption.py."""
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve.chaos import FaultInjector
+from repro.serve.engine import ServeEngine
+from repro.serve.errors import Cancelled, DeadlineExceeded, ServeError
+
+KEY = jax.random.PRNGKey(0)
+CACHE = 64
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    # float32 keeps greedy argmax stable across batching layouts
+    cfg = get_config("qwen2-1.5b", smoke=True).replace(dtype="float32")
+    params = M.init_params(KEY, cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size, L) for L in lens]
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("cache_len", CACHE)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("prefill_chunk", 16)
+    kw.setdefault("token_budget", 32)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _leak_free(eng):
+    pool = eng.pool
+    return bool((eng._ref == 0).all()
+                and eng.reclaimable_pages == eng.n_pages
+                and pool.parked_pages == 0
+                and len(pool._host_free) + pool.host_cached_pages
+                == pool.host_pages
+                and set(eng._host_store) == set(pool._host_node))
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector determinism
+
+
+def test_fault_schedule_is_pure_function_of_seed_and_tick():
+    kw = dict(p_alloc_fail=0.4, p_cancel=0.4, p_evict_storm=0.4,
+              p_stall=0.4)
+    a, b = FaultInjector(seed=11, **kw), FaultInjector(seed=11, **kw)
+    sched_a = [a.faults(t, [3, 1, 2]) for t in range(40)]
+    # consult b out of order, twice per tick: same schedule regardless
+    sched_b = {t: b.faults(t, [2, 3, 1]) for t in reversed(range(40))}
+    for t in range(40):
+        assert sched_a[t] == b.faults(t, [1, 2, 3]) == sched_b[t]
+    assert any(f["alloc_fail"] for f in sched_a)
+    assert any(f["cancel"] is not None for f in sched_a)
+    assert FaultInjector(seed=12, **kw).faults(0, [1]) != sched_a[0] or \
+        FaultInjector(seed=12, **kw).faults(1, [1]) != sched_a[1]
+
+
+def test_fault_draws_independent_of_liveness():
+    # storm/stall outcomes must not shift with how many requests are live
+    kw = dict(p_cancel=0.5, p_evict_storm=0.5, p_stall=0.5)
+    a, b = FaultInjector(seed=3, **kw), FaultInjector(seed=3, **kw)
+    for t in range(30):
+        fa, fb = a.faults(t, [7, 8]), b.faults(t, [])
+        assert fb["cancel"] is None  # nothing live, nothing to cancel
+        assert (fa["evict_storm"], fa["stall"]) == (fb["evict_storm"],
+                                                    fb["stall"])
+
+
+def test_fault_window_and_validation():
+    fi = FaultInjector(seed=0, p_stall=1.0, start_tick=10, stop_tick=12)
+    hits = [t for t in range(20) if fi.faults(t, [])["stall"]]
+    assert hits == [10, 11]
+    assert fi.log == [(10, "stall", None), (11, "stall", None)]
+    with pytest.raises(ValueError):
+        FaultInjector(p_cancel=1.5)
+    with pytest.raises(ValueError):
+        FaultInjector(p_alloc_fail=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# Chaos runs through the engine: leak-free, typed aborts, identical tokens
+
+
+def test_chaos_run_leakfree_and_token_identical(qwen):
+    cfg, params = qwen
+    prompts = _prompts(cfg, [16, 16, 6, 6, 12, 8])
+    clean = _engine(params, cfg, max_pages=16, host_pages=8,
+                    scheduler="slo")
+    want = [clean.submit(p, max_tokens=6).result() for p in prompts]
+
+    eng = _engine(params, cfg, max_pages=8, host_pages=8, scheduler="slo",
+                  fault_injector=FaultInjector(
+                      seed=3, p_alloc_fail=0.3, p_cancel=0.1,
+                      p_evict_storm=0.2, p_stall=0.2))
+    handles = [eng.submit(p, max_tokens=6, priority=i % 2)
+               for i, p in enumerate(prompts)]
+    eng.run()
+    assert all(h.done for h in handles)
+    n_ok = 0
+    for h, w in zip(handles, want):
+        if h.request.error is not None:
+            assert isinstance(h.request.error, (Cancelled,
+                                                DeadlineExceeded))
+            assert isinstance(h.request.error, ServeError)
+            with pytest.raises(type(h.request.error)):
+                h.result()
+        elif len(h.request.out_tokens) == 6:
+            assert list(h.request.out_tokens) == w  # survived == unchanged
+            n_ok += 1
+    assert n_ok >= 1  # the run must not degrade to all-cancelled
+    st_ = eng.stats
+    assert (st_["chaos_alloc_fails"] + st_["chaos_cancels"]
+            + st_["chaos_evict_storms"] + st_["chaos_stalled_ticks"]) > 0
+    assert st_["traces"] == 1
+    assert _leak_free(eng)
+
+
+def test_chaos_stall_advances_deadlines(qwen):
+    cfg, params = qwen
+    # every tick stalls: the clock runs, nothing is served, the deadline
+    # still fires — liveness of the abort path does not depend on progress
+    eng = _engine(params, cfg,
+                  fault_injector=FaultInjector(seed=0, p_stall=1.0))
+    (p,) = _prompts(cfg, [8])
+    h = eng.submit(p, max_tokens=4, deadline_ticks=3)
+    for _ in range(5):
+        eng.tick()
+    with pytest.raises(DeadlineExceeded):
+        h.result(timeout_ticks=1)
+    assert h.request.out_tokens == []
+    assert eng.stats["chaos_stalled_ticks"] >= 3
+    assert _leak_free(eng)
+
+
+# ---------------------------------------------------------------------------
+# Property: random pressure interleavings, spec off and on
+
+
+def _drive_pressure_interleaving(eng, cfg, expect, prompts, ops):
+    """Replay one op schedule against the shared engine; the hog/chat
+    priority split plus the undersized pool makes preempt/resume fire
+    inside ordinary interleavings rather than via a bespoke hook."""
+    handles = []
+    for op, j in ops:
+        if op == "submit":
+            k = j % len(prompts)
+            hog = len(prompts[k]) > 8
+            handles.append(eng.submit(
+                prompts[k], max_tokens=8 if hog else 3,
+                priority=0 if hog else 1,
+                deadline_ticks=None if j % 3 else 16))
+        elif op == "tick":
+            eng.tick()
+        elif handles:
+            handles[j % len(handles)].cancel()
+    eng.run()
+    assert all(h.done for h in handles)
+    for h in handles:
+        r = h.request
+        if (r.error is None and not r.cancelled
+                and len(r.out_tokens) == r.max_tokens):
+            assert list(r.out_tokens) == expect[r.prompt.tobytes()][
+                :r.max_tokens]
+    assert _leak_free(eng)
+
+
+def _pressure_fixture(fn, params, cfg, spec_k):
+    """One engine + reference transcripts shared across examples: later
+    examples inherit earlier cache/tier state — more adversarial than a
+    fresh pool, and much faster."""
+    if not hasattr(fn, "_st"):
+        prompts = _prompts(cfg, [16, 16, 6, 6])
+        ref = _engine(params, cfg, max_pages=24)
+        # keyed on the int32 form submit() normalizes prompts to
+        expect = {np.asarray(p, np.int32).tobytes():
+                  ref.submit(p, max_tokens=8).result()
+                  for p in prompts}
+        # undersized pool (two hog footprints) + host tier + slo classes:
+        # chat submits preempt decoding hogs, hogs park and resume
+        eng = _engine(params, cfg, max_pages=6, host_pages=8,
+                      scheduler="slo", spec_k=spec_k,
+                      fault_injector=FaultInjector(
+                          seed=7, p_alloc_fail=0.1, p_cancel=0.05,
+                          p_stall=0.05, p_evict_storm=0.05))
+        fn._st = (eng, expect, prompts)
+    return fn._st
+
+
+@settings(max_examples=5, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["submit", "tick", "tick",
+                                               "cancel"]),
+                              st.integers(0, 7)),
+                    min_size=4, max_size=16))
+def test_pressure_interleavings_never_leak(qwen, ops):
+    cfg, params = qwen
+    eng, expect, prompts = _pressure_fixture(
+        test_pressure_interleavings_never_leak, params, cfg, spec_k=0)
+    _drive_pressure_interleaving(eng, cfg, expect, prompts, ops)
+
+
+@settings(max_examples=5, deadline=None)
+@given(ops=st.lists(st.tuples(st.sampled_from(["submit", "tick", "tick",
+                                               "cancel"]),
+                              st.integers(0, 7)),
+                    min_size=4, max_size=16))
+def test_pressure_interleavings_never_leak_speculative(qwen, ops):
+    """The same property with speculation on: preempting a slot mid-draft
+    (and resuming it) must roll back cleanly — same transcripts, no leaked
+    pages on either tier."""
+    cfg, params = qwen
+    eng, expect, prompts = _pressure_fixture(
+        test_pressure_interleavings_never_leak_speculative, params, cfg,
+        spec_k=4)
+    _drive_pressure_interleaving(eng, cfg, expect, prompts, ops)
