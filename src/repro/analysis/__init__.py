@@ -1,0 +1,67 @@
+"""repro.analysis — static invariant analyzer for the serving stack.
+
+Four passes, one findings model, one CLI (``python -m repro.analysis``):
+
+- ``servelint``  — repo-specific AST lint (jit factory discipline, hot-path
+  nondeterminism, broad except, mutable defaults, retrace bombs);
+- ``contracts``  — donation contract checker: compiles every serve program
+  on shape-only dummies and PROVES the input_output_alias table donates
+  the state pools (and that the page gather doesn't);
+- ``lifecycle``  — page-lifecycle model checker: exhaustive BFS over a
+  small-pool transition system proving no leak / double-free /
+  parked-page eviction is reachable;
+- ``protocols``  — scheduler registry conformance (orderings are
+  permutations/subsequences; wrappers delegate verbatim).
+
+Findings are typed ``file:line`` records; ``# servelint: ignore[rule] —
+reason`` suppresses inline; ``baseline.json`` is checked in EMPTY and must
+stay empty.  See README.md in this directory for the rule reference.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import (BASELINE_PATH, Finding, Suppressions,
+                                     load_baseline, split_new)
+
+__all__ = ["Finding", "Suppressions", "load_baseline", "split_new",
+           "BASELINE_PATH", "run_all", "PASSES"]
+
+PASSES = ("lint", "contracts", "lifecycle", "protocols")
+
+
+def run_all(passes: Optional[Sequence[str]] = None, *,
+            compile_programs: bool = True
+            ) -> Tuple[List[Finding], Dict[str, Dict]]:
+    """Run the selected passes (default: all) and aggregate findings.
+
+    ``compile_programs=False`` skips the lower+compile proof inside the
+    contracts pass (its AST layers still run) — used by fast test paths.
+    """
+    selected = tuple(passes) if passes else PASSES
+    unknown = sorted(set(selected) - set(PASSES))
+    if unknown:
+        raise ValueError(f"unknown passes {unknown} (pick from {PASSES})")
+    findings: List[Finding] = []
+    stats: Dict[str, Dict] = {}
+    if "lint" in selected:
+        from repro.analysis.servelint import lint_tree
+        lint = lint_tree()
+        findings.extend(lint)
+        stats["lint"] = {"findings": len(lint)}
+    if "contracts" in selected:
+        from repro.analysis.contracts import check_contracts
+        got, s = check_contracts(compile_programs=compile_programs)
+        findings.extend(got)
+        stats["contracts"] = {**s, "findings": len(got)}
+    if "lifecycle" in selected:
+        from repro.analysis.lifecycle import check_lifecycle_findings
+        got, s = check_lifecycle_findings()
+        findings.extend(got)
+        stats["lifecycle"] = {**s, "findings": len(got)}
+    if "protocols" in selected:
+        from repro.analysis.protocols import check_protocols
+        got, s = check_protocols()
+        findings.extend(got)
+        stats["protocols"] = {**s, "findings": len(got)}
+    return findings, stats

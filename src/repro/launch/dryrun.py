@@ -294,7 +294,7 @@ def main(argv=None):
                       f"coll={res['collective_bytes_per_device']/2**30:.3f}GiB "
                       f"(lower {res['lower_s']}s compile {res['compile_s']}s)",
                       flush=True)
-            except Exception as e:
+            except Exception as e:  # servelint: ignore[broad-except] — dry-run cell loop: one cell's lowering failure must not kill the sweep; recorded in `failures` and printed with traceback
                 failures.append((arch, shape_name, tag, repr(e)))
                 print(f"FAIL {arch} × {shape_name} × {tag}: {e}", flush=True)
                 traceback.print_exc()

@@ -109,7 +109,7 @@ def run_plan(name: str, plan, mesh, out_dir: Path):
                   f"mem={t['memory_s']:8.2f}s coll={t['collective_s']:8.2f}s "
                   f"dom={t['dominant'][:4]} bound={t['step_time_lower_bound_s']:8.2f}s",
                   flush=True)
-        except Exception as e:
+        except Exception as e:  # servelint: ignore[broad-except] — hill-climb cell loop: a failed candidate is a data point; the error lands in the row and the climb continues
             rows.append({"cell": name, "label": label, "error": repr(e)[:300]})
             print(f"  {label[:60]:62s} FAILED: {e}", flush=True)
     with open(out_dir / f"{name}.json", "w") as f:

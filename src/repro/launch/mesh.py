@@ -8,8 +8,12 @@ topology model and the hop-cost scoring used by benchmarks/pinning.py.
 """
 from __future__ import annotations
 
+import logging
+
 import jax
 import numpy as np
+
+log = logging.getLogger(__name__)
 
 
 def make_production_mesh(*, multi_pod: bool = False, pinned: bool = True):
@@ -21,8 +25,14 @@ def make_production_mesh(*, multi_pod: bool = False, pinned: bool = True):
 
             devs = mesh_utils.create_device_mesh(shape)
             return jax.sharding.Mesh(devs, axes)
-        except Exception:
-            pass  # CPU fake devices: fall through to enumeration order
+        except (ImportError, NotImplementedError, ValueError,
+                AssertionError, RuntimeError) as e:
+            # the topology-aware path needs real accelerators in the right
+            # count; on CPU/fake devices it raises one of the above — log
+            # and fall back to enumeration order, never silently swallow
+            log.warning("topology-pinned mesh unavailable (%s: %s); "
+                        "falling back to enumeration-order mesh",
+                        type(e).__name__, e)
     devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
     return jax.sharding.Mesh(devs, axes)
 

@@ -86,7 +86,7 @@ class TrainLoop:
                 step += 1
             except FloatingPointError:
                 raise
-            except Exception:
+            except Exception:  # servelint: ignore[broad-except] — crash-recovery retry: any step failure restores from checkpoint and replays; re-raised once max_retries is exhausted
                 retries += 1
                 if retries > self.max_retries or self.ckpt_dir is None:
                     raise

@@ -1,0 +1,25 @@
+"""Fixture: bare/broad except (any scope).
+
+Line numbers asserted exactly by tests/test_analysis.py; edit with care.
+"""
+
+
+def swallow(fn):
+    try:
+        return fn()
+    except Exception:  # VIOLATION line 10: broad
+        return None
+
+
+def swallow_bare(fn):
+    try:
+        return fn()
+    except:  # noqa: E722  VIOLATION line 17: bare
+        return None
+
+
+def narrow(fn):
+    try:
+        return fn()
+    except (ValueError, KeyError):  # specific: NOT flagged
+        return None

@@ -1,0 +1,18 @@
+"""Fixture: nondeterminism in a hot path (rel=serve/...).
+
+Line numbers asserted exactly by tests/test_analysis.py; edit with care.
+"""
+import time
+
+import numpy as np
+
+
+def tick(pool):
+    jitter = np.random.rand()  # VIOLATION line 11: unseeded RNG
+    start = time.perf_counter()  # VIOLATION line 12: wall clock
+    for page in {3, 1, 2}:  # VIOLATION line 13: unordered set iteration
+        pool.append(page)
+    ok = sum(1 for p in set(pool))  # reducer over a set: NOT flagged
+    rng = np.random.default_rng((42, 7))  # tuple-seeded but NOT an
+    # allowlisted file -> VIOLATION line 16
+    return jitter, start, ok, rng

@@ -1,0 +1,16 @@
+"""Fixture: jax.jit outside a registered factory site (seeded violation).
+
+Linted with rel="serve/jit_outside_factory.py" — not a registered site.
+Line numbers are asserted exactly by tests/test_analysis.py; edit with care.
+"""
+import jax
+
+
+def tick(fn, x):
+    prog = jax.jit(fn)  # VIOLATION line 10: jit in the run path
+    return prog(x)
+
+
+@jax.jit  # decorator position: NOT flagged (module-level program def)
+def decorated(x):
+    return x + 1

@@ -1,0 +1,18 @@
+"""Fixture: mutable default arguments.
+
+Line numbers asserted exactly by tests/test_analysis.py; edit with care.
+"""
+
+
+def accum(x, out=[]):  # VIOLATION line 7: shared list default
+    out.append(x)
+    return out
+
+
+def keyed(x, *, table=dict()):  # VIOLATION line 12: dict() call default
+    table[x] = True
+    return table
+
+
+def fine(x, out=None):
+    return (out or []) + [x]

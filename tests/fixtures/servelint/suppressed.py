@@ -1,0 +1,20 @@
+"""Fixture: suppression syntax — findings here must come back suppressed.
+
+Line numbers asserted exactly by tests/test_analysis.py; edit with care.
+"""
+import time
+
+
+def measured(fn):
+    t0 = time.perf_counter()  # servelint: ignore[hot-nondeterminism] — measurement-only fixture
+    out = fn()
+    # servelint: ignore[hot-nondeterminism] — own-line comment covers next line
+    t1 = time.perf_counter()
+    return out, t1 - t0
+
+
+def unrelated(fn):
+    try:  # servelint: ignore[hot-nondeterminism] — wrong rule: does NOT cover
+        return fn()
+    except Exception:  # VIOLATION line 19: broad-except, not suppressed
+        return None
